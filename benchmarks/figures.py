@@ -1,0 +1,248 @@
+"""One benchmark per paper table/figure. Each returns (derived_metric, rows).
+
+All reproduce *trends* (the paper's results are normalized); every function
+documents the claim it checks and asserts it holds, so `benchmarks.run` is
+also a regression gate on the reproduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.core.design_space import sweep_decode, sweep_prefill
+from repro.core.frontiers import (colocated_frontier, disaggregated_frontier,
+                                  default_ttl_targets)
+from repro.core.hardware import DEFAULT_SYSTEM, SystemConfig
+from repro.core.kv_transfer import kv_transfer_requirement
+from repro.core.paper_models import (DEEPSEEK_R1, LLAMA31_8B, LLAMA31_70B,
+                                     LLAMA31_405B)
+from repro.core.pareto import area_under_frontier, frontier_at
+from repro.core.perf_model import Mapping, prefill_perf
+from repro.core.rate_matching import (dynamic_rate_match,
+                                      prefill_config_selection, rate_match,
+                                      rate_match_fixed_ratio)
+from repro.core.traffic import PATTERNS, DynamicTraffic
+
+MAXC = 256
+WINDOW = (10, 300)     # interactivity window for area metrics (tok/s/user)
+
+
+def fig1_pareto() -> Tuple[float, List[str]]:
+    """Fig 1: disagg vs co-located Pareto, prefill-heavy vs gen-heavy.
+    Claim: disagg expands the frontier under prefill-heavy traffic and is
+    ~neutral (or worse) under generation-heavy traffic."""
+    rows = []
+    gains = {}
+    for isl, osl, tag in [(16384, 512, "prefill-heavy"),
+                          (1024, 4096, "generation-heavy")]:
+        fd = disaggregated_frontier(DEEPSEEK_R1, isl, osl, max_chips=MAXC)
+        fc = colocated_frontier(DEEPSEEK_R1, isl, osl, max_chips=MAXC)
+        g = (area_under_frontier(fd, *WINDOW)
+             / max(area_under_frontier(fc, *WINDOW), 1e-9))
+        gains[tag] = g
+        rows.append(f"fig1,{tag},area_gain,{g:.3f}")
+        for x in (20, 50, 100, 200):
+            rows.append(f"fig1,{tag},tput@{x},"
+                        f"{frontier_at(fd, x):.2f},{frontier_at(fc, x):.2f}")
+    assert gains["prefill-heavy"] > gains["generation-heavy"], gains
+    assert gains["prefill-heavy"] > 1.02
+    return gains["prefill-heavy"], rows
+
+
+def fig5_cpp() -> Tuple[float, List[str]]:
+    """Fig 5: DeepSeek-R1, ISL 256K, 64 chips, EP x PP = 64. Claim: FTL
+    falls as PP rises (chunked pipelining) while throughput stays high."""
+    rows, ftls = [], []
+    for pp in (1, 2, 4, 8, 16):
+        m = Mapping(chips=64, tp=1, pp=pp, dp_attn=64 // pp,
+                    cpp_chunks=16 if pp > 1 else 1)
+        p = prefill_perf(DEEPSEEK_R1, m, 1, 262144)
+        tput = 262144 / (p.latency_s * 64)
+        ftls.append(p.latency_s)
+        rows.append(f"fig5,pp={pp},ftl_s,{p.latency_s:.2f},tok/s/chip,{tput:.0f}")
+    assert all(b < a for a, b in zip(ftls, ftls[1:])), ftls
+    return ftls[0] / ftls[-1], rows
+
+
+def fig6_arch_sensitivity() -> Tuple[float, List[str]]:
+    """Fig 6 + §4.1: benefits differ across architectures; MLA piggybacking
+    pays chunk re-projection unless up-projected KV is cached."""
+    rows = []
+    isl, osl = 16384, 1024
+    out = {}
+    for m in (DEEPSEEK_R1, LLAMA31_70B):
+        fd = disaggregated_frontier(m, isl, osl, max_chips=MAXC)
+        fc = colocated_frontier(m, isl, osl, max_chips=MAXC)
+        g = (area_under_frontier(fd, *WINDOW)
+             / max(area_under_frontier(fc, *WINDOW), 1e-9))
+        out[m.name] = g
+        rows.append(f"fig6,{m.name},area_gain,{g:.3f}")
+    # MLA chunk overhead: piggyback-only frontier with vs without caching
+    f_nocache = colocated_frontier(DEEPSEEK_R1, isl, osl, max_chips=MAXC,
+                                   non_piggyback=False, mla_chunk_cache=False)
+    f_cache = colocated_frontier(DEEPSEEK_R1, isl, osl, max_chips=MAXC,
+                                 non_piggyback=False, mla_chunk_cache=True)
+    a_nc = area_under_frontier(f_nocache, *WINDOW)
+    a_c = area_under_frontier(f_cache, *WINDOW)
+    rows.append(f"fig6,mla_chunk_cache_gain,area,{a_c / max(a_nc, 1e-9):.3f}")
+    assert a_c >= a_nc            # caching can only help
+    return a_c / max(a_nc, 1e-9), rows
+
+
+def fig7_model_size() -> Tuple[float, List[str]]:
+    """Fig 7: larger models benefit more from disaggregation."""
+    rows, gains = [], []
+    for m in (LLAMA31_8B, LLAMA31_70B, LLAMA31_405B):
+        fd = disaggregated_frontier(m, 8192, 512, max_chips=MAXC)
+        fc = colocated_frontier(m, 8192, 512, max_chips=MAXC)
+        g = (area_under_frontier(fd, *WINDOW)
+             / max(area_under_frontier(fc, *WINDOW), 1e-9))
+        gains.append(g)
+        rows.append(f"fig7,{m.name},area_gain,{g:.3f}")
+    assert gains[0] < gains[1] <= gains[2] * 1.2, gains
+    assert gains[0] < 1.0 < gains[2], gains
+    return gains[2] / gains[0], rows
+
+
+def fig8_traffic() -> Tuple[float, List[str]]:
+    """Fig 8: disaggregation helps most under prefill-heavy traffic."""
+    rows = []
+    gains = {}
+    for p in PATTERNS:
+        fd = disaggregated_frontier(DEEPSEEK_R1, p.isl, p.osl, max_chips=128)
+        fc = colocated_frontier(DEEPSEEK_R1, p.isl, p.osl, max_chips=128)
+        g = (area_under_frontier(fd, *WINDOW)
+             / max(area_under_frontier(fc, *WINDOW), 1e-9))
+        gains[p.name] = g
+        rows.append(f"fig8,{p.name},isl={p.isl},osl={p.osl},area_gain,{g:.3f}")
+    ph = max(gains[k] for k in gains if "prefill" in k or "long" in k)
+    gh = gains["generation-heavy"]
+    assert ph > gh, gains
+    return ph / max(gh, 1e-9), rows
+
+
+def fig9_ratio_varies() -> Tuple[float, List[str]]:
+    """Fig 9: optimal ctx:gen chip ratio varies with model and TTL target."""
+    rows, spread = [], []
+    for model, isl, osl in ((DEEPSEEK_R1, 8192, 1024),
+                            (LLAMA31_70B, 8192, 1024)):
+        pre = sweep_prefill(model, isl, max_chips=MAXC)
+        dec = sweep_decode(model, isl + osl // 2, max_chips=MAXC,
+                           max_ctx=isl + osl)
+        matched = dynamic_rate_match(pre, dec, isl=isl, osl=osl,
+                                     ftl_cutoff=10.0,
+                                     ttl_targets=[0.002, 0.01, 0.05, 0.25])
+        ratios = [r.ctx_gen_ratio for r in matched]
+        for r in matched:
+            rows.append(f"fig9,{model.name},ttl={1.0/r.tps_per_user:.3f},"
+                        f"ctx:gen,{r.ctx_gen_ratio:.3f}")
+        if ratios:
+            spread.append(max(ratios) / max(min(ratios), 1e-9))
+    assert spread and max(spread) > 1.5, spread   # ratio really moves
+    return max(spread), rows
+
+
+def fig10_fixed_vs_dynamic() -> Tuple[float, List[str]]:
+    """Fig 10: fixed ctx:gen ratios lose Pareto area vs dynamic matching."""
+    isl, osl = 8192, 1024
+    pre = sweep_prefill(DEEPSEEK_R1, isl, max_chips=MAXC)
+    dec = sweep_decode(DEEPSEEK_R1, isl + osl // 2, max_chips=MAXC,
+                       max_ctx=isl + osl)
+    best = prefill_config_selection(pre, 10.0)
+    ttls = default_ttl_targets(16)
+    dyn = dynamic_rate_match(pre, dec, isl=isl, osl=osl, ftl_cutoff=10.0,
+                             ttl_targets=ttls)
+    from repro.core.pareto import pareto_frontier
+    f_dyn = pareto_frontier([(r.tps_per_user, r.overall_tput_per_chip)
+                             for r in dyn])
+    a_dyn = area_under_frontier(f_dyn, *WINDOW)
+    rows = [f"fig10,dynamic,area,{a_dyn:.2f}"]
+    worst_loss = 1.0
+    for ratio in (0.5, 1.0, 3.5):
+        fixed = rate_match_fixed_ratio(best, dec, osl, ratio)
+        f_fix = pareto_frontier([(r.tps_per_user, r.overall_tput_per_chip)
+                                 for r in fixed])
+        a_fix = area_under_frontier(f_fix, *WINDOW)
+        rows.append(f"fig10,fixed={ratio},area,{a_fix:.2f},"
+                    f"vs_dynamic,{a_fix / max(a_dyn, 1e-9):.3f}")
+        worst_loss = min(worst_loss, a_fix / max(a_dyn, 1e-9))
+        assert a_fix <= a_dyn * 1.001
+    assert worst_loss < 0.9         # some fixed ratio clearly hurts
+    return worst_loss, rows
+
+
+def fig11_ici_domain() -> Tuple[float, List[str]]:
+    """Fig 11: larger interconnect domains help disaggregated serving
+    (Llama-3.1-70B gains high-TP decode options at low latency; the paper's
+    NVLink-domain sweep maps to the ICI-domain extent on TPU)."""
+    rows = []
+    areas = []
+    for dom in (16, 64):
+        sys_ = SystemConfig(ici_domain=dom)
+        fd = disaggregated_frontier(LLAMA31_70B, 8192, 1024, sys_,
+                                    max_chips=dom)
+        a = area_under_frontier(fd, *WINDOW)
+        areas.append(a)
+        rows.append(f"fig11,ici_domain={dom},area,{a:.2f}")
+    assert areas[1] > areas[0], areas
+    return areas[1] / max(areas[0], 1e-9), rows
+
+
+def fig12_kv_bandwidth() -> Tuple[float, List[str]]:
+    """Fig 12: max(egress, ingress) KV-transfer bandwidth vs TTL; claim:
+    provisioned datacenter bandwidth (DCN) suffices."""
+    rows = []
+    worst = 0.0
+    # realistic §4 mappings: DP attention for decode (the paper's
+    # high-throughput choice), modest TP for prefill
+    pre_map = Mapping(chips=32, tp=4, dp_attn=8)
+    for isl, osl in ((8192, 1024), (32768, 256)):
+        ftl = prefill_perf(DEEPSEEK_R1, pre_map, 1, isl).latency_s
+        for ttl in (0.005, 0.01, 0.02, 0.05):
+            dec_map = Mapping(chips=64, tp=1, dp_attn=64)
+            r = kv_transfer_requirement(
+                DEEPSEEK_R1, isl=isl, osl=osl, ftl=ftl, ttl=ttl,
+                prefill_mapping=pre_map, decode_mapping=dec_map,
+                prefill_batch=1, decode_batch=128)
+            worst = max(worst, r.max_bw)
+            rows.append(f"fig12,isl={isl},osl={osl},ttl={ttl},"
+                        f"egress_GBs,{r.egress_bw/1e9:.2f},"
+                        f"ingress_GBs,{r.ingress_bw/1e9:.2f},"
+                        f"feasible,{r.feasible}")
+    assert worst < DEFAULT_SYSTEM.chip.dcn_bw, worst
+    return worst / 1e9, rows
+
+
+def fig14_p50_approx() -> Tuple[float, List[str]]:
+    """Appendix C / Fig 14: P50 power-of-two approximation tracks the
+    dynamic-traffic frontier."""
+    dyn = DynamicTraffic(median_isl=8000, median_osl=480)
+    p50 = dyn.p50_pattern()
+    f_p50 = disaggregated_frontier(LLAMA31_70B, p50.isl, p50.osl,
+                                   max_chips=128)
+    pairs = dyn.sample(6, seed=0)
+    import numpy as np
+    areas = []
+    for i, o in pairs:
+        f = disaggregated_frontier(LLAMA31_70B, i, o, max_chips=128)
+        areas.append(area_under_frontier(f, *WINDOW))
+    a_p50 = area_under_frontier(f_p50, *WINDOW)
+    a_dyn = float(np.mean(areas))
+    ratio = a_p50 / max(a_dyn, 1e-9)
+    rows = [f"fig14,p50_area,{a_p50:.2f},dyn_area,{a_dyn:.2f},ratio,{ratio:.3f}"]
+    assert 0.4 < ratio < 2.5, ratio
+    return ratio, rows
+
+
+ALL_FIGURES = [
+    ("fig1_pareto", fig1_pareto),
+    ("fig5_cpp", fig5_cpp),
+    ("fig6_arch_sensitivity", fig6_arch_sensitivity),
+    ("fig7_model_size", fig7_model_size),
+    ("fig8_traffic", fig8_traffic),
+    ("fig9_ratio_varies", fig9_ratio_varies),
+    ("fig10_fixed_vs_dynamic", fig10_fixed_vs_dynamic),
+    ("fig11_ici_domain", fig11_ici_domain),
+    ("fig12_kv_bandwidth", fig12_kv_bandwidth),
+    ("fig14_p50_approx", fig14_p50_approx),
+]

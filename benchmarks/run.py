@@ -1,0 +1,34 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus the per-figure detail rows
+prefixed with '#'). Every figure function asserts its paper claim, so this
+doubles as the reproduction regression gate.
+"""
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks.figures import ALL_FIGURES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in ALL_FIGURES:
+        t0 = time.perf_counter()
+        try:
+            derived, rows = fn()
+            us = (time.perf_counter() - t0) * 1e6
+            print(f"{name},{us:.0f},{derived:.4f}")
+            for r in rows:
+                print(f"# {r}")
+        except AssertionError as e:
+            us = (time.perf_counter() - t0) * 1e6
+            failures += 1
+            print(f"{name},{us:.0f},CLAIM-FAILED:{e}")
+    if failures:
+        raise SystemExit(f"{failures} paper claims failed")
+
+
+if __name__ == "__main__":
+    main()

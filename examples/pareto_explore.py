@@ -1,0 +1,75 @@
+"""Design-space exploration: build the throughput-interactivity Pareto
+frontier for any model (paper models or assigned archs) and print the
+rate-matched deployment behind each frontier point.
+
+  PYTHONPATH=src python examples/pareto_explore.py --model deepseek-r1 \
+      --isl 16384 --osl 512
+  PYTHONPATH=src python examples/pareto_explore.py --model kimi-k2-1t-a32b
+"""
+import argparse
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.design_space import sweep_decode, sweep_prefill
+from repro.core.frontiers import colocated_frontier, default_ttl_targets
+from repro.core.pareto import area_under_frontier, pareto_frontier
+from repro.core.paper_models import (DEEPSEEK_R1, LLAMA31_8B, LLAMA31_70B,
+                                     LLAMA31_405B, perf_llm_from_config)
+from repro.core.rate_matching import dynamic_rate_match
+
+PAPER = {m.name: m for m in (DEEPSEEK_R1, LLAMA31_8B, LLAMA31_70B,
+                             LLAMA31_405B)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="deepseek-r1",
+                    help=f"one of {sorted(PAPER)} or --arch ids {ARCH_IDS}")
+    ap.add_argument("--isl", type=int, default=16384)
+    ap.add_argument("--osl", type=int, default=512)
+    ap.add_argument("--max-chips", type=int, default=256)
+    ap.add_argument("--ftl-cutoff", type=float, default=10.0)
+    args = ap.parse_args(argv)
+
+    model = (PAPER[args.model] if args.model in PAPER
+             else perf_llm_from_config(get_config(args.model)))
+    print(f"# {model.name}: {model.params()/1e9:.1f}B params "
+          f"({model.active_params()/1e9:.1f}B active), "
+          f"kv/token={model.kv_bytes_per_token()/1024:.1f}KiB, "
+          f"traffic ISL={args.isl} OSL={args.osl}")
+
+    pre = sweep_prefill(model, args.isl, max_chips=args.max_chips)
+    dec = sweep_decode(model, args.isl + args.osl // 2,
+                       max_chips=args.max_chips,
+                       max_ctx=args.isl + args.osl)
+    print(f"# design points: {len(pre)} prefill x {len(dec)} decode")
+
+    matched = dynamic_rate_match(pre, dec, isl=args.isl, osl=args.osl,
+                                 ftl_cutoff=args.ftl_cutoff,
+                                 ttl_targets=default_ttl_targets(20))
+    print("tps_per_user,tok_s_chip,ctx:gen,prefill_map,decode_map,"
+          "decode_batch")
+    frontier = pareto_frontier([(r.tps_per_user, r.overall_tput_per_chip)
+                                for r in matched])
+    seen = set()
+    for r in sorted(matched, key=lambda r: r.tps_per_user):
+        key = (round(r.tps_per_user, 1), round(r.overall_tput_per_chip, 1))
+        if (r.tps_per_user, r.overall_tput_per_chip) not in frontier or \
+                key in seen:
+            continue
+        seen.add(key)
+        pm, dm = r.prefill.mapping, r.decode.mapping
+        print(f"{r.tps_per_user:.1f},{r.overall_tput_per_chip:.2f},"
+              f"{r.ctx_gen_ratio:.2f},"
+              f"g{pm.chips}/tp{pm.tp}/pp{pm.pp}/cpp{pm.cpp_chunks},"
+              f"g{dm.chips}/tp{dm.tp}/dp{dm.dp_attn},{r.decode.batch}")
+
+    f_co = colocated_frontier(model, args.isl, args.osl,
+                              max_chips=args.max_chips)
+    a_dis = area_under_frontier(frontier, 10, 300)
+    a_co = area_under_frontier(f_co, 10, 300)
+    print(f"# area[10..300 tok/s/user]: disagg={a_dis:.1f} coloc={a_co:.1f} "
+          f"gain={a_dis/max(a_co, 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end disaggregated serving driver (the paper's system, executable).
+
+Serves a small model with batched requests through separate prefill/decode
+pools, then repeats the same traffic co-located — demonstrating the §2
+tension on real compute: co-located p99 TTL inflates because decode stalls
+behind prefills; the disaggregated decode pool's TTL tail stays flat. Also
+demonstrates elastic failover by killing a decode engine mid-run.
+
+  PYTHONPATH=src python examples/serve_disagg.py
+"""
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.traffic import TrafficPattern
+from repro.models import transformer as T
+from repro.serving.disagg import ColocatedOrchestrator, DisaggOrchestrator
+from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
+from repro.serving.engine import Engine
+from repro.serving.request import TrafficGen
+
+cfg = get_smoke_config("phi3-medium-14b")
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+ISL, OSL, N = 96, 8, 10
+CAP = ISL + OSL + 8
+
+
+def traffic(seed):
+    gen = TrafficGen(vocab=cfg.vocab_size, rate=1e6,   # burst arrival
+                     pattern=TrafficPattern("ph", ISL, OSL), seed=seed)
+    return gen.generate(60.0, max_requests=N)
+
+
+def engines(n, base):
+    return [Engine(base + i, cfg, params, slots=4, capacity=CAP)
+            for i in range(n)]
+
+
+print(f"== prefill-heavy traffic: ISL={ISL} OSL={OSL}, {N} requests ==")
+
+# --- disaggregated: 1 prefill + 2 decode engines -------------------------
+dis = DisaggOrchestrator(engines(1, 0), engines(2, 10),
+                         elastic=ElasticRateMatcher(ElasticConfig()))
+m_dis = dis.run(traffic(1))
+print("disaggregated:", {k: round(v, 4) for k, v in m_dis.items()})
+print(f"  kv transfers: {dis.stats.transfers} "
+      f"({dis.stats.transferred_bytes/2**20:.1f} MiB)")
+
+# --- co-located: 3 engines, whole-prompt prefill preempts decode ---------
+co = ColocatedOrchestrator(engines(3, 20))
+m_co = co.run(traffic(2))
+print("co-located   :", {k: round(v, 4) for k, v in m_co.items()})
+
+tail_dis = m_dis["p99_ttl_s"] / max(m_dis["p50_ttl_s"], 1e-9)
+tail_co = m_co["p99_ttl_s"] / max(m_co["p50_ttl_s"], 1e-9)
+print(f"TTL tail (p99/p50): disagg {tail_dis:.1f}x vs coloc {tail_co:.1f}x "
+      f"-> decode interference {'ELIMINATED' if tail_dis < tail_co else '??'}")
+
+# --- fault tolerance: kill a decode engine mid-flight ---------------------
+print("== failure drill: decode engine dies mid-run ==")
+pre, d1, d2 = engines(1, 30)[0], *engines(2, 40)
+orch = DisaggOrchestrator([pre], [d1, d2], elastic=ElasticRateMatcher())
+orig = d1.decode_step
+state = {"fired": False}
+def flaky(toks):
+    if len(d1.step_times) >= 2 and not state["fired"]:
+        state["fired"] = True
+        d1.fail()
+    return orig(toks)
+d1.decode_step = flaky
+m_fail = orch.run(traffic(3))
+print(f"completed {m_fail['completed']}/{N} despite "
+      f"{orch.stats.engine_failures} engine failure(s); "
+      f"{orch.stats.requeued} request(s) re-queued and replayed")
+assert m_fail["completed"] == N
+print("serve_disagg OK")

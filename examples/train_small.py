@@ -1,0 +1,41 @@
+"""Train a ~20M-param dense LM for a few hundred steps on CPU with the full
+fault-tolerant loop (checkpoints, resume, straggler monitor), showing the
+loss decreasing on the structured synthetic stream.
+
+  PYTHONPATH=src python examples/train_small.py --steps 200
+"""
+import argparse
+
+from repro.data.pipeline import make_pipeline
+from repro.models.config import ModelConfig
+from repro.train.trainer import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/train_small_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = ModelConfig(
+        name="dense-20m", family="dense",
+        num_layers=6, d_model=384, num_heads=6, num_kv_heads=2,
+        d_ff=1024, vocab_size=8192, remat=False, logits_chunk=128)
+    print(f"{cfg.name}: {cfg.param_count():,} params")
+
+    data = make_pipeline(cfg, seq_len=128, global_batch=8, seed=0)
+    tr = Trainer(cfg, data, ckpt_dir=args.ckpt_dir, ckpt_every=50, lr=1e-3)
+    start = tr.init_or_restore()
+    print(f"starting at step {start}")
+    tr.train(args.steps, on_step=lambda s, m: (
+        print(f"step {s:4d}  loss {m['loss']:.4f}  "
+              f"({m['step_s']*1e3:.0f} ms)") if s % 20 == 0 else None))
+    losses = [h["loss"] for h in tr.history]
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({len(tr.monitor.events)} straggler events)")
+    assert losses[-1] < losses[0]
+    print("train_small OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Aggregate results/dryrun JSONs into the §Roofline markdown table."""
+import glob
+import json
+import sys
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main(mesh="single"):
+    rows = []
+    for f in sorted(glob.glob(f"results/dryrun/*__{mesh}.json")):
+        r = json.load(open(f))
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], None, r.get("error", "?")))
+            continue
+        rows.append((r["arch"], r["shape"], r, None))
+
+    print("| arch | shape | peak GiB/dev | compute | memory | collective |"
+          " dominant | MODEL/HLO | roofline frac | one-line action |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for arch, shape, r, err in rows:
+        if r is None:
+            print(f"| {arch} | {shape} | FAIL | {err} |")
+            continue
+        rf = r["roofline"]
+        peak = r["memory"]["peak_per_device"] / 2**30
+        print(f"| {arch} | {shape} | {peak:.2f} | {fmt_s(rf['compute_s'])} |"
+              f" {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} |"
+              f" {rf['dominant']} | {rf['flops_ratio']:.2f} |"
+              f" {rf['roofline_fraction']:.3f} | |")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or ["single"]))

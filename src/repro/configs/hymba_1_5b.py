@@ -1,0 +1,23 @@
+"""hymba-1.5b [hybrid]: parallel attn+mamba heads. [arXiv:2411.13676; hf].
+
+32L d_model=1600 25H (GQA kv=5, head_dim=64) d_ff=5504 ssm_state=16.
+Deviation (DESIGN.md §4): all attention is SWA (window 1024) for a uniform
+scan-over-layers KV layout; Hymba's 3 global-attn layers are dropped — the
+parallel SSM branch carries long-range state. This keeps long_500k decode
+sub-quadratic with a bounded ring-buffer KV.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid", block="hybrid",
+    num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+    head_dim=64, d_ff=5504, vocab_size=32001, rope_theta=10_000.0,
+    sliding_window=1024, ssm_state=16, ssm_conv=4, ssm_expand=1,
+)
+
+SMOKE = ModelConfig(
+    name="hymba-smoke", family="hybrid", block="hybrid",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=160, vocab_size=96, remat=False, logits_chunk=32,
+    sliding_window=16, ssm_state=4,
+)

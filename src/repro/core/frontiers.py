@@ -1,0 +1,103 @@
+"""Frontier builders: disaggregated vs co-located (piggybacked or not).
+
+These assemble the Pareto curves behind Figs 1, 6, 7, 8, 10, 11 from the
+perf model + design space + rate matching.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.design_space import (DesignPoint, sweep_decode, sweep_prefill,
+                                     _pow2)
+from repro.core.hardware import SystemConfig, DEFAULT_SYSTEM
+from repro.core.pareto import pareto_frontier
+from repro.core.perf_model import (Mapping, PerfLLM, decode_step_perf,
+                                   hbm_fits, piggyback_step_perf,
+                                   prefill_perf)
+from repro.core.rate_matching import dynamic_rate_match
+
+Point = Tuple[float, float]
+
+FTL_CUTOFF_DEFAULT = 10.0          # paper: FTL > 10 s excluded
+
+
+def default_ttl_targets(n: int = 24) -> List[float]:
+    """Log-spaced TTL targets: 2 ms .. 1 s (interactivity 1..500 tok/s/user)."""
+    return [2e-3 * (500 ** (i / (n - 1))) for i in range(n)]
+
+
+def disaggregated_frontier(model: PerfLLM, isl: int, osl: int,
+                           sys_: SystemConfig = DEFAULT_SYSTEM, *,
+                           ftl_cutoff: float = FTL_CUTOFF_DEFAULT,
+                           ttl_targets: Optional[Sequence[float]] = None,
+                           max_chips: Optional[int] = None
+                           ) -> List[Point]:
+    pre = sweep_prefill(model, isl, sys_, max_chips=max_chips)
+    dec = sweep_decode(model, isl + osl // 2, sys_, max_chips=max_chips,
+                       max_ctx=isl + osl)
+    matched = dynamic_rate_match(pre, dec, isl=isl, osl=osl,
+                                 ftl_cutoff=ftl_cutoff,
+                                 ttl_targets=list(ttl_targets or
+                                                  default_ttl_targets()))
+    pts = [(r.tps_per_user, r.overall_tput_per_chip) for r in matched]
+    return pareto_frontier(pts)
+
+
+def colocated_frontier(model: PerfLLM, isl: int, osl: int,
+                       sys_: SystemConfig = DEFAULT_SYSTEM, *,
+                       piggyback: bool = True,
+                       non_piggyback: bool = True,
+                       ftl_cutoff: float = FTL_CUTOFF_DEFAULT,
+                       mla_chunk_cache: bool = False,
+                       max_chips: Optional[int] = None
+                       ) -> List[Point]:
+    """Co-located pool: every instance serves both phases.
+
+    non-piggybacked: batch alternates a full prefill then OSL decode steps;
+    decode stalls during prefill inflate effective TTL (the IFB tension).
+
+    piggybacked: every step carries decode_batch tokens + a prefill chunk
+    sized for steady-state rate balance (chunk = b*ISL/OSL); TTL is uniform
+    but each step is slower (Sarathi). MLA pays chunk re-projection (§4.1)
+    unless mla_chunk_cache.
+    """
+    pts: List[Point] = []
+    max_chips = max_chips or sys_.ici_domain
+    for g in _pow2(1, max_chips):
+        for pp in _pow2(1, min(g, 16)):
+            if g % pp:
+                continue
+            for tp in _pow2(1, g // pp):
+                if (g // pp) % tp:
+                    continue
+                m = Mapping(chips=g, tp=tp, pp=pp, dp_attn=g // (pp * tp))
+                if not m.valid(model, sys_):
+                    continue
+                for b in _pow2(1, 1024):
+                    if not hbm_fits(model, m, b, isl + osl, sys_):
+                        continue
+                    d = decode_step_perf(model, m, b, isl + osl // 2, sys_)
+                    if non_piggyback:
+                        # cycle: prefill the whole batch, then osl decode
+                        # steps; prefills preempt decode (the IFB stall)
+                        pb_ = prefill_perf(model, m, b, isl, sys_)
+                        cycle = pb_.latency_s + osl * d.latency_s
+                        ftl = pb_.latency_s
+                        if ftl < ftl_cutoff:
+                            ttl_eff = cycle / osl
+                            tput = b * osl / (cycle * g)
+                            pts.append((1.0 / ttl_eff, tput))
+                    if piggyback:
+                        # balanced chunk so request in-rate == out-rate
+                        chunk = max(1, int(b * isl / max(osl, 1)))
+                        chunk = min(chunk, isl)
+                        pb = piggyback_step_perf(
+                            model, m, b, isl + osl // 2, chunk, isl // 2,
+                            sys_, mla_chunk_cache=mla_chunk_cache)
+                        ftl = isl / chunk * pb.latency_s
+                        if ftl < ftl_cutoff:
+                            ttl = pb.latency_s
+                            tput = b / (pb.latency_s * g)
+                            pts.append((1.0 / ttl, tput))
+    return pareto_frontier(pts)

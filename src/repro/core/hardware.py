@@ -1,0 +1,68 @@
+"""Hardware descriptions for the analytical performance model.
+
+The paper targets Blackwell GPUs + NVLink domains; our deployment target is
+TPU v5e pods with ICI domains (DESIGN.md §2). All bandwidths are per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipConfig:
+    name: str
+    flops_bf16: float          # FLOP/s
+    flops_int8: float
+    hbm_bw: float              # B/s
+    hbm_cap: float             # bytes
+    ici_bw_per_link: float     # B/s, unidirectional
+    ici_links: int             # links per chip participating in a collective
+    dcn_bw: float              # B/s per chip for cross-pod / pool transfers
+
+    @property
+    def ici_bw(self) -> float:
+        return self.ici_bw_per_link * self.ici_links
+
+
+TPU_V5E = ChipConfig(
+    name="tpu-v5e",
+    flops_bf16=197e12,
+    flops_int8=394e12,
+    hbm_bw=819e9,
+    hbm_cap=16 * 2**30,
+    ici_bw_per_link=50e9,
+    ici_links=4,
+    dcn_bw=25e9,
+)
+
+TPU_V5P = ChipConfig(
+    name="tpu-v5p",
+    flops_bf16=459e12,
+    flops_int8=918e12,
+    hbm_bw=2765e9,
+    hbm_cap=95 * 2**30,
+    ici_bw_per_link=100e9,
+    ici_links=6,
+    dcn_bw=25e9,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    chip: ChipConfig = TPU_V5E
+    ici_domain: int = 256       # chips reachable over ICI (one pod)
+    pods: int = 1
+    # modelled efficiencies (napkin-level, stated in EXPERIMENTS.md)
+    matmul_eff: float = 0.85    # peak-achievable MXU fraction on large GEMMs
+    eff_knee_tokens: int = 128  # tokens/chip where MXU eff reaches ~50%
+    collective_overlap: float = 0.7  # fraction of collective hidden by compute
+
+    @property
+    def total_chips(self) -> int:
+        return self.ici_domain * self.pods
+
+    def with_domain(self, n: int) -> "SystemConfig":
+        return dataclasses.replace(self, ici_domain=n)
+
+
+DEFAULT_SYSTEM = SystemConfig()

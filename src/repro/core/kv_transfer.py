@@ -1,0 +1,60 @@
+"""KV-cache transfer bandwidth requirements (paper §5.1, Eqs 1-2, Fig 12).
+
+Egress (prefill side) must keep up with layer-by-layer overlapped transfer
+within FTL; ingress (decode side) must land a request's KV within the time
+decode spends on one request slot (TTL * OSL). Parallelism schemes that
+*duplicate* rather than shard the KV (TP > n_kv_heads) are excluded from the
+per-chip normalization — only chips holding distinct shards count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.hardware import SystemConfig, DEFAULT_SYSTEM
+from repro.core.perf_model import Mapping, PerfLLM, kv_shard_chips
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferRequirement:
+    egress_bw: float      # B/s per prefill chip (Eq 1)
+    ingress_bw: float     # B/s per decode chip (Eq 2)
+    kv_bytes_per_request: float
+    feasible: bool        # max(egress, ingress) <= provisioned interconnect
+
+    @property
+    def max_bw(self) -> float:
+        return max(self.egress_bw, self.ingress_bw)
+
+
+def kv_transfer_requirement(model: PerfLLM, *, isl: int, osl: int,
+                            ftl: float, ttl: float,
+                            prefill_mapping: Mapping,
+                            decode_mapping: Mapping,
+                            prefill_batch: int = 1, decode_batch: int = 1,
+                            sys_: SystemConfig = DEFAULT_SYSTEM
+                            ) -> TransferRequirement:
+    """Eqs 1-2 with the sharding/duplication correction.
+
+    Eq 1: BW_egress  = KV(ISL) * BS_p / (FTL * NumGPU_p^shard)
+    Eq 2: BW_ingress = KV(ISL) * BS_d / (TTL * OSL * NumGPU_d^shard)
+    """
+    kv_req = model.kv_bytes_per_token() * isl
+    n_pre = kv_shard_chips(model, prefill_mapping)
+    n_dec = kv_shard_chips(model, decode_mapping)
+    egress = kv_req * prefill_batch / (ftl * n_pre)
+    ingress = kv_req * decode_batch / (ttl * max(osl, 1) * n_dec)
+    provisioned = sys_.chip.dcn_bw
+    return TransferRequirement(
+        egress_bw=egress, ingress_bw=ingress,
+        kv_bytes_per_request=kv_req,
+        feasible=max(egress, ingress) <= provisioned)
+
+
+def transfer_latency_overlapped(model: PerfLLM, isl: int, ftl: float,
+                                prefill_mapping: Mapping,
+                                sys_: SystemConfig = DEFAULT_SYSTEM) -> float:
+    """Exposed (non-overlapped) transfer time under layer-by-layer push:
+    only the *last layer's* KV cannot overlap with compute."""
+    per_layer = model.kv_bytes_per_token() * isl / model.num_layers
+    n_pre = kv_shard_chips(model, prefill_mapping)
+    return per_layer / (n_pre * sys_.chip.dcn_bw)

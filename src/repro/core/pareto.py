@@ -1,0 +1,42 @@
+"""Throughput-interactivity Pareto frontiers (Fig 1 and friends)."""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+Point = Tuple[float, float]   # (interactivity = tokens/s/user, tput/chip)
+
+
+def pareto_frontier(points: Sequence[Point]) -> List[Point]:
+    """Upper-right frontier: max throughput for any given interactivity."""
+    pts = sorted(points, key=lambda p: (-p[0], -p[1]))
+    out: List[Point] = []
+    best = -1.0
+    for x, y in pts:
+        if y > best:
+            out.append((x, y))
+            best = y
+    return list(reversed(out))   # ascending interactivity
+
+
+def frontier_at(frontier: Sequence[Point], interactivity: float) -> float:
+    """Best throughput achievable at >= the given interactivity."""
+    best = 0.0
+    for x, y in frontier:
+        if x >= interactivity:
+            best = max(best, y)
+    return best
+
+
+def area_under_frontier(frontier: Sequence[Point],
+                        x_lo: float, x_hi: float, samples: int = 64) -> float:
+    """The paper's versatility metric: area under the frontier over an
+    interactivity window (log-spaced sampling)."""
+    import math
+    if not frontier or x_hi <= x_lo:
+        return 0.0
+    total = 0.0
+    lo, hi = math.log(x_lo), math.log(x_hi)
+    for i in range(samples):
+        x = math.exp(lo + (hi - lo) * (i + 0.5) / samples)
+        total += frontier_at(frontier, x)
+    return total / samples

@@ -1,0 +1,104 @@
+"""Split-KV flash decoding for TPU (single-token GQA decode).
+
+TPU-native rethinking of FlashDecoding (GPU: one CTA per KV split, shuffle
+reduction). Here:
+  - The whole *q-head group* of a KV head (G = H/Hkv rows) is packed into the
+    MXU matmul M dimension, so decode matmuls are [G, dh] x [dh, Bk] instead
+    of G separate vector-matrix products — the TPU analogue of the
+    tensor-core packing trick (keeps the 128x128 MXU from running at 1/G
+    utilization).
+  - The KV sequence axis is split across a parallel grid dimension; each
+    split emits unnormalized partials (o, m, l) and the tiny cross-split
+    online-softmax reduction happens in the jit'd wrapper (ops.py) — on real
+    hardware the splits execute concurrently across TensorCores.
+  - Per-sequence valid lengths (continuous batching!) mask the tail split via
+    iota comparison; fully-dead splits skip all compute with pl.when.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                   scale: float, block_kv: int):
+    s_idx = pl.program_id(2)
+    length = len_ref[0]
+    start = s_idx * block_kv
+    live = start < length
+
+    q = q_ref[0, 0]                                           # [G, dh]
+    G = q.shape[0]
+
+    @pl.when(live)
+    def _compute():
+        k = k_ref[0, :, 0, :]                                 # [Bk, dh]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # [G, Bk]
+        cols = start + jax.lax.broadcasted_iota(jnp.int32, (G, block_kv), 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m = jnp.max(s, axis=-1)                               # [G]
+        p = jnp.exp(s - m[:, None])
+        p = jnp.where((m > 0.5 * NEG_INF)[:, None], p, 0.0)
+        l = jnp.sum(p, axis=-1)
+        o = jax.lax.dot_general(p.astype(v.dtype), v,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        o_ref[0, 0, 0] = o
+        m_ref[0, 0, 0] = m
+        l_ref[0, 0, 0] = l
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        o_ref[0, 0, 0] = jnp.zeros_like(o_ref[0, 0, 0])
+        m_ref[0, 0, 0] = jnp.full_like(m_ref[0, 0, 0], NEG_INF)
+        l_ref[0, 0, 0] = jnp.zeros_like(l_ref[0, 0, 0])
+
+
+def decode_attention_kernel(q, k_cache, v_cache, lengths, *, scale: float,
+                            block_kv: int = 512, interpret: bool = False):
+    """q: [B, Hkv, G, dh]; caches: [B, Smax, Hkv, dh]; lengths: [B] int32.
+
+    Returns partials (o [B,Hkv,S_splits,G,dh] f32, m, l [B,Hkv,S_splits,G]).
+    """
+    B, Hkv, G, dh = q.shape
+    Smax = k_cache.shape[1]
+    block_kv = min(block_kv, Smax)
+    assert Smax % block_kv == 0
+    splits = Smax // block_kv
+    grid = (B, Hkv, splits)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_kv=block_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, s: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, dh), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, dh), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, dh), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G, dh), lambda b, h, s: (b, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, s: (b, h, s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, splits, G, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, splits, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, splits, G), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)

@@ -1,0 +1,37 @@
+"""Jit'd wrapper: split-KV partials + cross-split online-softmax reduce."""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_kernel)
+
+
+@partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_kv: int = 512,
+                     interpret: bool = False):
+    """q: [B, H, dh]; caches: [B, Smax, Hkv, dh]; lengths: [B] int32.
+
+    Returns [B, H, dh]. H % Hkv == 0; the q-head group is packed into the
+    MXU M-dim inside the kernel; split partials are merged here.
+    """
+    B, H, dh = q.shape
+    Hkv = k_cache.shape[2]
+    assert H % Hkv == 0
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, Hkv, G, dh)
+    o, m, l = decode_attention_kernel(
+        qg, k_cache, v_cache, lengths.astype(jnp.int32), scale=scale,
+        block_kv=block_kv, interpret=interpret)
+    # merge over splits (axis=2) with online-softmax algebra
+    m_all = jnp.max(m, axis=2, keepdims=True)                 # [B,Hkv,1,G]
+    alpha = jnp.exp(m - m_all)                                # [B,Hkv,S,G]
+    l_all = jnp.sum(l * alpha, axis=2)                        # [B,Hkv,G]
+    o_all = jnp.sum(o * alpha[..., None], axis=2)             # [B,Hkv,G,dh]
+    o_all = o_all / jnp.maximum(l_all, 1e-30)[..., None]
+    return o_all.reshape(B, H, dh).astype(q.dtype)

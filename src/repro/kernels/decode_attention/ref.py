@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, scale=None):
+    """q: [B,H,dh]; caches: [B,Smax,Hkv,dh]; lengths: [B]. -> [B,H,dh]."""
+    B, H, dh = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    k = jnp.repeat(k_cache, H // Hkv, axis=2).astype(jnp.float32)
+    v = jnp.repeat(v_cache, H // Hkv, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k) * scale
+    mask = jnp.arange(Smax)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v).astype(q.dtype)

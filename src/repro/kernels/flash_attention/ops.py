@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("causal", "q_offset", "block_q",
+                                   "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    block_q: int = 256, block_kv: int = 256,
+                    interpret: bool = False):
+    """Causal GQA flash attention. q: [B,Sq,H,dh]; k,v: [B,Skv,Hkv,dh]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    return flash_attention_kernel(
+        q, k, v, scale=scale, causal=causal, q_offset=q_offset,
+        block_q=block_q, block_kv=block_kv, interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, chunk offset)."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale=None, causal=True, q_offset=0):
+    """q: [B,Sq,H,dh]; k,v: [B,Skv,Hkv,dh]. fp32 reference."""
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        rows = q_offset + jnp.arange(Sq)[:, None]
+        cols = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(cols <= rows, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

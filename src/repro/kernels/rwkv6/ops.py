@@ -1,0 +1,34 @@
+"""Jit'd wrapper: [B,S,H,N] layout -> kernel's [B*H,S,N] layout."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.rwkv6 import wkv_kernel
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, logw, u, state0, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,logw: [B,S,H,N]; u: [H,N]; state0: [B,H,N,N] fp32.
+
+    Returns (y [B,S,H,N] fp32, state [B,H,N,N] fp32).
+    """
+    B, S, H, N = r.shape
+    pad = (-S) % chunk if S > chunk else (-S) % S if S else 0
+    eff_chunk = min(chunk, S)
+    pad = (-S) % eff_chunk
+    def prep(a):
+        if pad:
+            a = jnp.concatenate(
+                [a, jnp.zeros((B, pad, H, N), a.dtype)], axis=1)
+        return a.transpose(0, 2, 1, 3).reshape(B * H, S + pad, N)
+    rr, kk, vv = prep(r), prep(k), prep(v)
+    lw = prep(logw)  # pad logw with 0 -> w=1 (no decay), k=0 -> no update
+    uu = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, N)
+    s0 = state0.reshape(B * H, N, N)
+    y, s = wkv_kernel(rr, kk, vv, lw, uu, s0, chunk=eff_chunk,
+                      interpret=interpret)
+    y = y.reshape(B, H, S + pad, N).transpose(0, 2, 1, 3)[:, :S]
+    return y, s.reshape(B, H, N, N)

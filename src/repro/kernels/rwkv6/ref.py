@@ -1,0 +1,27 @@
+"""Pure-jnp sequential oracle for the RWKV-6 WKV recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, logw, u, state0):
+    """Sequential token-by-token recurrence (the definitional semantics).
+
+    r,k,v,logw: [BH, S, N]; u: [BH, N]; state0: [BH, N, N] fp32.
+    Returns (y [BH,S,N] fp32, final state [BH,N,N] fp32).
+
+        S_t = diag(w_t) S_{t-1} + k_t^T v_t
+        y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    """
+    r, k, v, logw = (a.astype(jnp.float32) for a in (r, k, v, logw))
+    u = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = inp                       # [BH,N] each
+        kv = k_t[..., :, None] * v_t[..., None, :]      # [BH,N,N]
+        y = jnp.einsum("bn,bnm->bm", r_t, S + u[..., None] * kv)
+        S_new = jnp.exp(lw_t)[..., None] * S + kv
+        return S_new, y
+
+    xs = tuple(a.transpose(1, 0, 2) for a in (r, k, v, logw))
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), state

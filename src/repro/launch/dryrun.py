@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds abstract params / optimizer state / inputs / caches
+     (ShapeDtypeStruct carrying NamedShardings — zero allocation),
+  2. ``jax.jit(step).lower(...).compile()`` on the production meshes
+     (16x16 single-pod and 2x16x16 multi-pod),
+  3. records ``memory_analysis()`` (bytes/device: proves the sharding fits),
+     ``cost_analysis()`` (per-scan-iteration HLO cost; see §Roofline caveat),
+     and the collective-op inventory parsed from the optimized HLO,
+  4. writes one JSON per cell under results/dryrun/ (resumable).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, cells, get_config, get_shape
+from repro.core.roofline import (MULTI_POD, SINGLE_POD, Overrides,
+                                 cell_roofline)
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.frontends import input_specs
+from repro.parallel import specs as SP
+from repro.parallel.sharding import use_mesh
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|c64|c128)\[([0-9,]*)\]")
+
+
+def parse_collectives(hlo_text: str):
+    """Inventory of collective ops: per-op result bytes (per occurrence in
+    the HLO — ops inside while bodies run once per trip; trip counts are
+    static constants of our program, applied in EXPERIMENTS.md)."""
+    out = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES)
+                      + r")\b", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        typestr = m.group(1)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(typestr):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        if nbytes:
+            out.append({"op": op, "bytes": nbytes})
+    return out
+
+
+def _with_shardings(abstract_tree, sharding_tree):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract_tree, sharding_tree)
+
+
+def serve_needs_fsdp(cfg: ModelConfig, mesh_model: int = 16) -> bool:
+    """Weight-gathered serving when model-axis sharding alone overflows HBM."""
+    from repro.core.hardware import TPU_V5E
+    return cfg.param_count() * 2 / mesh_model > 0.45 * TPU_V5E.hbm_cap
+
+
+# §Perf hillclimb variants: named sets of config/layout overrides
+# (EXPERIMENTS.md §Perf records hypothesis -> change -> before -> after)
+VARIANTS = {
+    "base": {},
+    "kvq": {"kv_quant": True},
+    "etp": {"moe_expert_tp": True},
+    "kvq+etp": {"kv_quant": True, "moe_expert_tp": True},
+    "bf16psum": {"moe_combine_fp32": False},
+    "noremat": {"remat": False},
+    "bf16psum+noremat": {"moe_combine_fp32": False, "remat": False},
+    "accum4": {"grad_accum": 4},
+    "expand": {"grouped_decode": False},
+    "bf16psum+noremat+accum16": {"moe_combine_fp32": False, "remat": False,
+                                 "grad_accum": 16},
+    "grouped+kvq": {"kv_quant": True},
+    "expand+kvq": {"grouped_decode": False, "kv_quant": True},
+}
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, args) ready for jax.jit(fn).lower(*args)."""
+    expert_tp = cfg.moe_expert_tp and shape.kind != "train"
+    fsdp = shape.kind == "train" or (serve_needs_fsdp(cfg) and not expert_tp)
+    params_abs = T.abstract_params(cfg)
+    params_sh = SP.params_shardings(cfg, params_abs, mesh, fsdp=fsdp,
+                                    expert_tp=expert_tp)
+    params = _with_shardings(params_abs, params_sh)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        step_fn = make_train_step(cfg, opt)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_sh = SP.opt_state_shardings(params_sh, opt_abs, mesh)
+        opt_state = _with_shardings(opt_abs, opt_sh)
+        batch_abs = dict(input_specs(cfg, shape))
+        batch_sh = SP.batch_shardings(batch_abs, mesh)
+        batch = _with_shardings(batch_abs, batch_sh)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = partial(step_fn)
+        return (lambda p, o, b, s: fn(p, o, b, s)), (params, opt_state,
+                                                     batch, step), fsdp
+
+    if shape.kind == "prefill":
+        inputs_abs = dict(input_specs(cfg, shape))
+        inputs_sh = SP.batch_shardings(inputs_abs, mesh)
+        inputs = _with_shardings(inputs_abs, inputs_sh)
+        fn = lambda p, i: T.prefill_full(p, cfg, i)
+        return fn, (params, inputs), fsdp
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    cache_abs = T.abstract_cache(cfg, B, S)
+    cache_sh = SP.cache_shardings(cfg, cache_abs, mesh, B)
+    cache = _with_shardings(cache_abs, cache_sh)
+    import math
+    dp_size = math.prod(mesh.shape[a] for a in mesh.axis_names
+                        if a in ("pod", "data"))
+    tok_abs = {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    tok_sh = SP.batch_shardings(tok_abs, mesh,
+                                batch_shardable=(B % dp_size == 0))
+    tokens = _with_shardings(tok_abs, tok_sh)["tokens"]
+    fn = lambda p, c, t: T.decode_step(p, cfg, c, t)
+    return fn, (params, cache, tokens), fsdp
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             force: bool = False, variant: str = "base"):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    if variant != "base":
+        tag += f"__{variant}"
+    out_path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(out_path) and not force:
+        print(f"[skip existing] {tag}")
+        return json.load(open(out_path))
+
+    cfg = get_config(arch).replace(pad_heads_to=16,  # model-axis multiple
+                                   **VARIANTS[variant])
+    shape = get_shape(shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "kind": shape.kind, "variant": variant, "status": "error"}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        etp = cfg.moe_expert_tp and shape.kind != "train"
+        with use_mesh(mesh, fsdp=(shape.kind == "train"
+                                  or (serve_needs_fsdp(cfg) and not etp))):
+            fn, args, fsdp = build_cell(cfg, shape, mesh)
+            donate = (0, 1) if shape.kind == "train" else \
+                     (1,) if shape.kind == "decode" else ()
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        rec.update({
+            "status": "ok",
+            "fsdp": fsdp,
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                # memory_analysis reports PER-DEVICE sizes under SPMD
+                "peak_per_device": (mem.argument_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+            },
+            "cost_analysis": {k: v for k, v in
+                              (compiled.cost_analysis() or {}).items()
+                              if isinstance(v, (int, float))
+                              and k in ("flops", "bytes accessed",
+                                        "transcendentals")},
+        })
+        text = compiled.as_text()
+        inv = parse_collectives(text)
+        by_op = {}
+        for e in inv:
+            by_op.setdefault(e["op"], {"count": 0, "bytes": 0})
+            by_op[e["op"]]["count"] += 1
+            by_op[e["op"]]["bytes"] += e["bytes"]
+        rec["collectives"] = by_op
+        rec["hlo_bytes"] = len(text)
+        # analytic roofline (single-pod basis; see core/roofline.py),
+        # with overrides mirroring this variant's compiled configuration
+        ov = Overrides(
+            remat=cfg.remat,
+            moe_combine_fp32=cfg.moe_combine_fp32,
+            kv_bytes_elem=(1.0 + 2.0 / cfg.dh) if cfg.kv_quant else 2.0,
+            decode_grouped=bool(cfg.grouped_decode and cfg.can_group_decode),
+            serve_fsdp=bool(serve_needs_fsdp(cfg)
+                            and not (cfg.moe_expert_tp)
+                            and shape.kind != "train"),
+        )
+        rt = cell_roofline(cfg, shape,
+                           SINGLE_POD if mesh_kind == "single" else MULTI_POD,
+                           ov)
+        rec["roofline"] = {
+            "hlo_flops": rt.hlo_flops, "model_flops": rt.model_flops,
+            "hbm_bytes_per_chip": rt.hbm_bytes_per_chip,
+            "collective_bytes_per_chip": rt.collective_bytes_per_chip,
+            "compute_s": rt.compute_s, "memory_s": rt.memory_s,
+            "collective_s": rt.collective_s, "dominant": rt.dominant,
+            "step_s": rt.step_s,
+            "roofline_fraction": rt.roofline_fraction,
+            "flops_ratio": rt.flops_ratio,
+        }
+        print(f"[ok {rec['compile_s']:7.1f}s] {tag} "
+              f"peak/dev={rec['memory']['peak_per_device']/2**30:.2f}GiB "
+              f"dominant={rt.dominant} frac={rt.roofline_fraction:.3f}")
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        rec["compile_s"] = round(time.time() - t0, 1)
+        print(f"[FAIL {rec['compile_s']:6.1f}s] {tag}: {rec['error'][:200]}")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", choices=list(VARIANTS), default="base")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = []
+    if args.all:
+        for arch, shape_name, runnable, why in cells(include_skips=True):
+            if not runnable:
+                print(f"[skip cell] {arch}/{shape_name}: {why}")
+                continue
+            todo += [(arch, shape_name, m) for m in meshes]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape, m) for m in meshes]
+
+    ok = fail = 0
+    for arch, shape_name, m in todo:
+        rec = run_cell(arch, shape_name, m, args.out, force=args.force,
+                       variant=args.variant)
+        ok += rec["status"] == "ok"
+        fail += rec["status"] != "ok"
+    print(f"dryrun: {ok} ok, {fail} failed, {len(todo)} cells")
+    return 0 if fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

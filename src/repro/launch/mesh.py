@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — smoke tests see 1 device; only dryrun.py forces
+512 host devices (and does so before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a ("data","model") mesh (smokes/examples)."""
+    n = len(jax.devices())
+    model = 1
+    for m in (8, 4, 2, 1):
+        if n % m == 0 and n // m >= 1:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,83 @@
+"""Disaggregated serving launcher.
+
+Runs a real (small) model through the executable serving runtime — prefill
+pool + decode pool + KV handoff + IFB + elastic rate matching — and prints
+SLA metrics. On a pod this is where the mesh + params_shardings would be
+installed (launch/dryrun.py proves those lower); on CPU we serve the smoke
+configs end-to-end.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+      --prefill-engines 1 --decode-engines 2 --requests 16 --isl 64 --osl 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.traffic import TrafficPattern
+from repro.models import transformer as T
+from repro.serving.disagg import ColocatedOrchestrator, DisaggOrchestrator
+from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
+from repro.serving.engine import Engine
+from repro.serving.request import TrafficGen
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b",
+                    help="architecture family (smoke-sized for CPU)")
+    ap.add_argument("--mode", choices=["disagg", "coloc"], default="disagg")
+    ap.add_argument("--prefill-engines", type=int, default=1)
+    ap.add_argument("--decode-engines", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--isl", type=int, default=48)
+    ap.add_argument("--osl", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=20.0)
+    ap.add_argument("--piggyback-chunk", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    capacity = args.isl + args.osl + 8
+
+    def mk(i):
+        return Engine(i, cfg, params, slots=args.slots, capacity=capacity)
+
+    gen = TrafficGen(vocab=cfg.vocab_size, rate=args.rate,
+                     pattern=TrafficPattern("cli", args.isl, args.osl),
+                     seed=args.seed)
+    reqs = gen.generate(3600.0, max_requests=args.requests)
+
+    if args.mode == "disagg":
+        orch = DisaggOrchestrator(
+            [mk(i) for i in range(args.prefill_engines)],
+            [mk(100 + i) for i in range(args.decode_engines)],
+            elastic=ElasticRateMatcher(ElasticConfig()))
+        metrics = orch.run(reqs)
+        extra = {"transfers": orch.stats.transfers,
+                 "transferred_MB": orch.stats.transferred_bytes / 2**20,
+                 "prefill_pool": len(orch.prefill_pool),
+                 "decode_pool": len(orch.decode_pool),
+                 "elastic_moves": orch.elastic.moves}
+    else:
+        orch = ColocatedOrchestrator(
+            [mk(i) for i in range(args.prefill_engines
+                                  + args.decode_engines)],
+            piggyback_chunk=args.piggyback_chunk)
+        metrics = orch.run(reqs)
+        extra = {}
+
+    print(json.dumps({"arch": cfg.name, "mode": args.mode,
+                      **{k: round(v, 4) for k, v in metrics.items()},
+                      **extra}, indent=1, default=str))
+    assert metrics["completed"] == args.requests
+    return metrics
+
+
+if __name__ == "__main__":
+    main()

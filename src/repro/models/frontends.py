@@ -1,0 +1,62 @@
+"""Modality frontend stubs.
+
+Per the assignment, ``[audio]`` / ``[vlm]`` entries specify the transformer
+BACKBONE only — the modality frontend is a stub whose outputs appear as
+precomputed inputs:
+
+- audio (musicgen): the EnCodec tokenizer is the stub; the backbone consumes
+  EnCodec codes directly (vocab=2048), so inputs are plain token ids.
+- vision (llava-next): the CLIP tower + anyres tiling is the stub; inputs
+  include precomputed patch embeddings [B, P, vision_dim] which the backbone
+  projects (2-layer MLP) and prepends to the text embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if cfg.frontend == "vision":
+            P = cfg.vision_patches
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S - P), jnp.int32)
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, P, cfg.vision_dim), jnp.dtype(cfg.dtype))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.frontend == "vision":
+            P = cfg.vision_patches
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S - P), jnp.int32)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, P, cfg.vision_dim), jnp.dtype(cfg.dtype))
+        return specs
+    # decode: one token per sequence; the cache spec is produced separately
+    return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+
+def synth_inputs(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+    """Concrete random inputs matching input_specs (for smokes/examples)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, s in specs.items():
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=s.shape), s.dtype)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=s.shape), s.dtype)
+    return out

@@ -1,0 +1,247 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear recurrence.
+
+The defining v6 feature — per-channel, per-token decay ``w_t = exp(-exp(
+w0 + lora(x)))`` — is kept exactly. The WKV recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+is evaluated with a *chunked* algorithm in which **every exponential is of a
+non-positive number** (cumulative log-decays are monotone non-increasing), so
+the math is exact and overflow-free in fp32 without clamping semantics:
+
+    intra-chunk:  s[j,i] = sum_n r[j,n] k[i,n] exp(cw[j-1,n] - cw[i,n]) (i<j)
+    inter-chunk:  y[j]  += (r[j] * exp(cw[j-1])) @ S_chunk_start
+    state update: S'     = diag(exp(cw[L])) S + sum_i (k[i]*exp(cw[L]-cw[i]))^T v[i]
+
+Simplification vs the released checkpoints (documented in DESIGN.md): the
+r/k/v/g token-shift interpolators use static mu (RWKV-5 style); only the
+decay w keeps the full data-dependent LoRA. This preserves the paper-relevant
+property (attention-free O(1)-state decode, chunked prefill).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.parallel.sharding import constrain
+
+f32 = jnp.float32
+
+DECAY_LORA = 64
+
+
+def init_rwkv_block(key, cfg: ModelConfig):
+    D = cfg.d_model
+    H = cfg.num_heads
+    N = D // H
+    ks = jax.random.split(key, 12)
+    dt = cfg.jdtype
+    s = 1.0 / jnp.sqrt(D).astype(f32)
+
+    def lin(k, shape):
+        return (jax.random.normal(k, shape, f32) * s).astype(dt)
+
+    return {
+        "tm_norm": jnp.ones((D,), dt),
+        "cm_norm": jnp.ones((D,), dt),
+        # time-mix interpolators (static mu) + decay LoRA (data-dependent)
+        "mu": (jax.random.uniform(ks[0], (5, D), f32)).astype(dt),  # r,k,v,g,w
+        "w0": jnp.zeros((D,), f32) - 0.6,
+        "w_lora_a": lin(ks[1], (D, DECAY_LORA)),
+        "w_lora_b": lin(ks[2], (DECAY_LORA, D)) * 0.0,
+        "u": (jax.random.normal(ks[3], (H, N), f32) * 0.5).astype(f32),
+        "wr": lin(ks[4], (D, D)),
+        "wk": lin(ks[5], (D, D)),
+        "wv": lin(ks[6], (D, D)),
+        "wg": lin(ks[7], (D, D)),
+        "wo": lin(ks[8], (D, D)),
+        "ln_x": jnp.ones((H, N), f32),       # per-head group norm scale
+        # channel-mix
+        "cm_mu": (jax.random.uniform(ks[9], (2, D), f32)).astype(dt),  # r,k
+        "cm_wk": lin(ks[10], (D, cfg.d_ff)),
+        "cm_wv": lin(ks[11], (cfg.d_ff, D)),
+        "cm_wr": lin(ks[0], (D, D)),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    """Per-layer recurrent state (this is the 'KV cache' of RWKV)."""
+    D, H = cfg.d_model, cfg.num_heads
+    N = D // H
+    return {
+        "s": jnp.zeros((batch, H, N, N), f32),
+        "tm_x": jnp.zeros((batch, D), cfg.jdtype),
+        "cm_x": jnp.zeros((batch, D), cfg.jdtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV core
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = 32):
+    """r,k,v,logw: [B,S,H,N]; u: [H,N]; state: [B,H,N,N] fp32.
+
+    Returns (y [B,S,H,N], new_state). Exact; every exp() arg is <= 0.
+    """
+    B, S, H, N = r.shape
+    Lc = min(chunk, S)
+    pad = (-S) % Lc
+    if pad:
+        z = jnp.zeros((B, pad, H, N), r.dtype)
+        zf = jnp.zeros((B, pad, H, N), logw.dtype)
+        r, k, v = (jnp.concatenate([a, z], 1) for a in (r, k, v))
+        logw = jnp.concatenate([logw, zf], 1)   # logw=0 -> w=1 (no decay)
+    Sp = r.shape[1]
+    nc = Sp // Lc
+
+    def to_chunks(a):
+        return a.reshape(B, nc, Lc, H, N).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r.astype(f32), k.astype(f32),
+                                      v.astype(f32), logw.astype(f32)))
+
+    def body(S0, inp):
+        r_c, k_c, v_c, lw_c = inp                       # [B,Lc,H,N]
+        cw = jnp.cumsum(lw_c, axis=1)                   # inclusive, <= 0
+        cw_prev = cw - lw_c                             # cw_{j-1}
+        q = r_c * jnp.exp(cw_prev)
+        y_inter = jnp.einsum("blhn,bhnm->blhm", q, S0)
+        diff = cw_prev[:, :, None] - cw[:, None, :]     # [B,j,i,H,N]
+        diff = jnp.minimum(diff, 0.0)
+        tri = (jnp.arange(Lc)[:, None] > jnp.arange(Lc)[None, :])
+        a = jnp.exp(diff) * tri[None, :, :, None, None]
+        s = jnp.einsum("bjhn,bjihn,bihn->bjih", r_c, a, k_c)
+        y_intra = jnp.einsum("bjih,bihm->bjhm", s, v_c)
+        coef = jnp.einsum("blhn,hn,blhn->blh", r_c, u, k_c)
+        y_diag = coef[..., None] * v_c
+        decay_all = jnp.exp(cw[:, -1])                  # [B,H,N]
+        kd = k_c * jnp.exp(cw[:, -1][:, None] - cw)
+        S1 = decay_all[..., None] * S0 + jnp.einsum("blhn,blhm->bhnm", kd, v_c)
+        return S1, y_inter + y_intra + y_diag
+
+    state_f, yc = jax.lax.scan(body, state.astype(f32), (rc, kc, vc, lwc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, N)[:, :S]
+    return y, state_f
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single-token recurrence. r,k,v,logw: [B,H,N]; state: [B,H,N,N]."""
+    r, k, v, logw = (a.astype(f32) for a in (r, k, v, logw))
+    kv = k[..., :, None] * v[..., None, :]              # [B,H,N,N]
+    y = jnp.einsum("bhn,bhnm->bhm", r, state + u[..., None] * kv)
+    new_state = jnp.exp(logw)[..., None] * state + kv
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full block
+
+
+def _shift(x, prev):
+    """Token shift: returns x_{t-1} for each t; prev is x_{-1} [B,D]."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv_block(params, x, state, cfg: ModelConfig, *, chunk: int = 32,
+               impl: str = "xla", interpret: bool = False
+               ) -> Tuple[jnp.ndarray, dict]:
+    """x: [B,S,D]; state: per-layer state dict. Returns (y, new_state).
+
+    impl="pallas" runs the WKV recurrence through the TPU kernel
+    (kernels/rwkv6); "xla" is the equivalent chunked-jnp path."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    N = D // H
+    dt = x.dtype
+
+    # ---- time mix ----
+    xn = rms_norm(x, params["tm_norm"], cfg.norm_eps)
+    prev = _shift(xn, state["tm_x"])
+    xx = prev - xn
+    mu = params["mu"].astype(f32)
+    xr, xk, xv, xg, xw = (xn.astype(f32) + xx.astype(f32) * mu[i]
+                          for i in range(5))
+    r = (xr.astype(dt) @ params["wr"]).reshape(B, S, H, N)
+    k = (xk.astype(dt) @ params["wk"]).reshape(B, S, H, N)
+    v = (xv.astype(dt) @ params["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu((xg.astype(dt) @ params["wg"]).astype(f32))
+    # data-dependent decay (the v6 feature)
+    lora = jnp.tanh(xw.astype(dt) @ params["w_lora_a"]) @ params["w_lora_b"]
+    w_raw = params["w0"] + lora.astype(f32)
+    logw = -jnp.exp(w_raw).reshape(B, S, H, N)          # log w_t <= 0
+
+    if impl == "pallas":
+        from repro.kernels.rwkv6.ops import wkv as wkv_kernel_op
+        y, s_new = wkv_kernel_op(r, k, v, logw, params["u"].astype(f32),
+                                 state["s"], chunk=chunk,
+                                 interpret=interpret)
+    else:
+        y, s_new = wkv_chunked(r, k, v, logw, params["u"], state["s"],
+                               chunk=chunk)
+    # per-head group norm then gate
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5) * params["ln_x"]
+    y = (y.reshape(B, S, D) * g).astype(dt) @ params["wo"]
+    x = x + constrain(y, "dp", None, None)
+
+    # ---- channel mix ----
+    xn2 = rms_norm(x, params["cm_norm"], cfg.norm_eps)
+    prev2 = _shift(xn2, state["cm_x"])
+    xx2 = (prev2 - xn2).astype(f32)
+    cmu = params["cm_mu"].astype(f32)
+    cr = (xn2.astype(f32) + xx2 * cmu[0]).astype(dt)
+    ck = (xn2.astype(f32) + xx2 * cmu[1]).astype(dt)
+    kk = jnp.square(jax.nn.relu((ck @ params["cm_wk"]).astype(f32))).astype(dt)
+    kk = constrain(kk, "dp", None, "tp")
+    cv = kk @ params["cm_wv"]
+    out = jax.nn.sigmoid((cr @ params["cm_wr"]).astype(f32)).astype(dt) * cv
+    x = x + constrain(out, "dp", None, None)
+
+    new_state = {"s": s_new, "tm_x": xn[:, -1, :], "cm_x": xn2[:, -1, :]}
+    return x, new_state
+
+
+def rwkv_block_step(params, x, state, cfg: ModelConfig):
+    """Single-token decode. x: [B,1,D]."""
+    B, _, D = x.shape
+    H = cfg.num_heads
+    N = D // H
+    dt = x.dtype
+
+    xn = rms_norm(x, params["tm_norm"], cfg.norm_eps)[:, 0]   # [B,D]
+    xx = (state["tm_x"] - xn).astype(f32)
+    mu = params["mu"].astype(f32)
+    xr, xk, xv, xg, xw = (xn.astype(f32) + xx * mu[i] for i in range(5))
+    r = (xr.astype(dt) @ params["wr"]).reshape(B, H, N)
+    k = (xk.astype(dt) @ params["wk"]).reshape(B, H, N)
+    v = (xv.astype(dt) @ params["wv"]).reshape(B, H, N)
+    g = jax.nn.silu((xg.astype(dt) @ params["wg"]).astype(f32))
+    lora = jnp.tanh(xw.astype(dt) @ params["w_lora_a"]) @ params["w_lora_b"]
+    logw = -jnp.exp(params["w0"] + lora.astype(f32)).reshape(B, H, N)
+
+    y, s_new = wkv_step(r, k, v, logw, params["u"], state["s"])
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5) * params["ln_x"]
+    y = (y.reshape(B, D) * g).astype(dt) @ params["wo"]
+    x = x + y[:, None, :]
+
+    xn2 = rms_norm(x, params["cm_norm"], cfg.norm_eps)[:, 0]
+    xx2 = (state["cm_x"] - xn2).astype(f32)
+    cmu = params["cm_mu"].astype(f32)
+    cr = (xn2.astype(f32) + xx2 * cmu[0]).astype(dt)
+    ck = (xn2.astype(f32) + xx2 * cmu[1]).astype(dt)
+    kk = jnp.square(jax.nn.relu((ck @ params["cm_wk"]).astype(f32))).astype(dt)
+    cv = kk @ params["cm_wv"]
+    out = jax.nn.sigmoid((cr @ params["cm_wr"]).astype(f32)).astype(dt) * cv
+    x = x + out[:, None, :]
+
+    new_state = {"s": s_new, "tm_x": xn, "cm_x": xn2}
+    return x, new_state

@@ -1,0 +1,115 @@
+"""Sharding rules: logical axes -> mesh axes, param/activation specs.
+
+All sharding is expressed against *logical* axis names which are bound to
+mesh axes by a ``ShardingRules`` table, so the same model code serves the
+single-pod ``("data","model")`` mesh, the multi-pod ``("pod","data","model")``
+mesh, and the 1-device CPU smoke path (everything replicated).
+
+Conventions
+-----------
+- "dp"      : batch / token dim                  -> ("pod","data") or ("data",)
+- "fsdp"    : param dim sharded for ZeRO/FSDP    -> ("pod","data") when fsdp on
+- "tp"      : tensor-parallel dim (heads, d_ff)  -> ("model",)
+- "ep"      : expert-parallel dim (num_experts)  -> ("model",)
+- "vocab"   : vocab dim of embed / lm_head       -> ("model",)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rule table
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    dp: Tuple[str, ...] = ()
+    fsdp: Tuple[str, ...] = ()
+    tp: Tuple[str, ...] = ()
+    ep: Tuple[str, ...] = ()
+    vocab: Tuple[str, ...] = ()
+
+    def resolve(self, *logical: Optional[str]) -> P:
+        """Map a tuple of logical axis names (or None) to a PartitionSpec."""
+        out = []
+        for ax in logical:
+            if ax is None:
+                out.append(None)
+            else:
+                mesh_axes = getattr(self, ax)
+                out.append(mesh_axes if mesh_axes else None)
+        return P(*out)
+
+
+def make_rules(mesh: Optional[Mesh], fsdp: bool = False) -> ShardingRules:
+    """Build the rule table for a mesh (None -> fully replicated)."""
+    if mesh is None:
+        return ShardingRules()
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    model_axes = ("model",) if "model" in names else ()
+    return ShardingRules(
+        dp=batch_axes,
+        fsdp=batch_axes if fsdp else (),
+        tp=model_axes,
+        ep=model_axes,
+        vocab=model_axes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh plumbing (model code looks sharding up here)
+
+_CURRENT: dict = {"mesh": None, "rules": ShardingRules()}
+
+
+class use_mesh:
+    """Context manager binding the ambient mesh + rules for model code."""
+
+    def __init__(self, mesh: Optional[Mesh], fsdp: bool = False):
+        self.mesh = mesh
+        self.rules = make_rules(mesh, fsdp=fsdp)
+
+    def __enter__(self):
+        self._saved = dict(_CURRENT)
+        _CURRENT["mesh"] = self.mesh
+        _CURRENT["rules"] = self.rules
+        return self
+
+    def __exit__(self, *exc):
+        _CURRENT.update(self._saved)
+        return False
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT["mesh"]
+
+
+def current_rules() -> ShardingRules:
+    return _CURRENT["rules"]
+
+
+def logical_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, current_rules().resolve(*logical))
+
+
+def constrain(x, *logical: Optional[str]):
+    """with_sharding_constraint against logical axes (no-op without a mesh)."""
+    s = logical_sharding(*logical)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def named_sharding(spec: P) -> Optional[NamedSharding]:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,247 @@
+"""PartitionSpec builders for params, optimizer state, caches, batches.
+
+Rules (DESIGN.md §5): TP over "model" (heads / ffn-hidden / vocab), EP over
+"model" (experts), DP/FSDP over ("pod","data"). Explicit input shardings must
+divide evenly (unlike internal GSPMD propagation), so:
+  - q-head counts are padded to the model-axis multiple at the *parameter*
+    level (ModelConfig.pad_heads_to; masked in the o-projection — exact
+    semantics, waste charged in the roofline FLOPS ratio);
+  - vocab is padded via ModelConfig.vocab_pad (logits masked to -inf);
+  - KV caches shard the *sequence* dim over the model axis when kv-head
+    counts don't divide it (context-parallel decode attention — GSPMD turns
+    the softmax reductions into psums); batch=1 long-context decode shards
+    the sequence over every axis;
+  - anything else non-divisible falls back to replication (sanitize_spec).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import ShardingRules, make_rules
+
+
+def _path_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_pspec(key: str, shape, cfg: ModelConfig, r: ShardingRules,
+                stacked: bool) -> P:
+    """PartitionSpec for one parameter leaf. `stacked` = leading layer dim."""
+    name = key.split("/")[-1]
+    lead = (None,) if stacked else ()
+    tp, ep, fsdp, vocab = r.tp or None, r.ep or None, r.fsdp or None, r.vocab or None
+
+    table = {
+        # embedding / head
+        "embed": P(vocab, fsdp),
+        "lm_head": P(fsdp, vocab),
+        # attention
+        "wq": P(*lead, fsdp, tp, None),
+        "wk": P(*lead, fsdp, tp, None),
+        "wv": P(*lead, fsdp, tp, None),
+        "wo": P(*lead, tp, None, fsdp),
+        "bq": P(*lead, tp, None),
+        "bk": P(*lead, tp, None),
+        "bv": P(*lead, tp, None),
+        # dense ffn
+        "wi_gate": P(*lead, fsdp, tp),
+        "wi_up": P(*lead, fsdp, tp),
+        "wo_ffn": P(*lead, tp, fsdp),
+        # moe
+        "router": P(*lead, None, None),
+        "wg": P(*lead, ep, fsdp, None),
+        "wu": P(*lead, ep, fsdp, None),
+        "wd": P(*lead, ep, None, fsdp),
+        "shared_wg": P(*lead, fsdp, tp),
+        "shared_wu": P(*lead, fsdp, tp),
+        "shared_wd": P(*lead, tp, fsdp),
+        # rwkv time-mix / channel-mix
+        "wr": P(*lead, fsdp, tp),
+        "w_lora_a": P(*lead, fsdp, None),
+        "w_lora_b": P(*lead, None, None),
+        "cm_wk": P(*lead, fsdp, tp),
+        "cm_wv": P(*lead, tp, fsdp),
+        "cm_wr": P(*lead, fsdp, tp),
+        # ssm
+        "in_proj": P(*lead, fsdp, tp),
+        "out_proj": P(*lead, tp, fsdp),
+        "x_proj": P(*lead, tp, None),
+        "conv_w": P(*lead, None, tp),
+        "A_log": P(*lead, tp, None),
+        # vision projector
+        "w1": P(fsdp, tp),
+        "w2": P(fsdp, tp),
+    }
+    if name in table:
+        spec = table[name]
+        if len(spec) == len(shape):
+            return spec
+    # rwkv square projections share names (wk/wv/wg/wo) with attention but
+    # are [L, D, D] / [L, D, F]; shard input dim fsdp, output dim tp
+    if name in ("wk", "wv", "wg") and len(shape) == 3 and stacked:
+        return P(None, fsdp, tp)
+    if name == "wo" and len(shape) == 3 and stacked:
+        return P(None, tp, fsdp)
+    # default: replicate (norms, scalars, mu, u, biases, dt, D_skip ...)
+    return P(*([None] * len(shape)))
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    out = 1
+    for a in entry:
+        out *= mesh.shape[a]
+    return out
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide evenly (explicit
+    input shardings — unlike internal GSPMD propagation — must divide)."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        n = _axis_size(mesh, entry)
+        out.append(entry if (n > 1 and dim % n == 0) or n == 1 else None)
+    return P(*out)
+
+
+def params_shardings(cfg: ModelConfig, abstract_params, mesh: Mesh,
+                     fsdp: bool = False, expert_tp: bool = False):
+    """Tree of NamedShardings matching abstract_params.
+
+    expert_tp: serving layout for giant MoE — expert weights sharded
+    (experts -> model axis, d_ff -> data axes) so they are fully resident
+    with no per-step gathers (pairs with ModelConfig.moe_expert_tp)."""
+    r = make_rules(mesh, fsdp=fsdp)
+    dp = make_rules(mesh, fsdp=True).fsdp     # the data axes
+
+    def assign(path, leaf):
+        key = _path_key(path)
+        stacked = key.startswith("blocks/")
+        name = key.split("/")[-1]
+        if expert_tp and name in ("wg", "wu", "wd") and len(leaf.shape) == 4:
+            spec = (P(None, r.ep, None, dp) if name in ("wg", "wu")
+                    else P(None, r.ep, dp, None))
+        else:
+            spec = param_pspec(key, leaf.shape, cfg, r, stacked)
+        return NamedSharding(mesh, sanitize_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+def opt_state_shardings(param_shardings, abstract_opt, mesh: Mesh):
+    """Optimizer state shardings derived from param specs.
+
+    adamw m/v mirror params; adafactor vr/vc drop the last / second-to-last
+    dim of the param spec; scalars replicate.
+    """
+    flat_ps = {_path_key(p): s for p, s in
+               jax.tree_util.tree_flatten_with_path(param_shardings)[0]}
+
+    def assign(path, leaf):
+        key = _path_key(path)
+        parts = key.split("/")
+        if parts[-1] in ("count",):
+            return NamedSharding(mesh, P())
+        # strip the optimizer-state prefix/suffix to find the param key
+        if parts[0] in ("m", "v"):
+            pkey = "/".join(parts[1:])
+            if pkey in flat_ps:
+                return flat_ps[pkey]
+        if parts[0] == "s":
+            pkey = "/".join(parts[1:-1])
+            if pkey in flat_ps:
+                spec = flat_ps[pkey].spec
+                if parts[-1] == "vr":
+                    return NamedSharding(
+                        mesh, sanitize_spec(P(*spec[:-1]), leaf.shape, mesh))
+                if parts[-1] == "vc":
+                    return NamedSharding(mesh, sanitize_spec(
+                        P(*(tuple(spec[:-2]) + (spec[-1],))), leaf.shape,
+                        mesh))
+                if parts[-1] == "v":
+                    return flat_ps[pkey]
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_opt)
+
+
+def batch_shardings(abstract_batch, mesh: Mesh, batch_shardable: bool = True):
+    r = make_rules(mesh)
+    dp = r.dp or None
+
+    def assign(_, leaf):
+        if not batch_shardable or not dp:
+            return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+        return NamedSharding(mesh, sanitize_spec(
+            P(dp, *([None] * (len(leaf.shape) - 1))), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_batch)
+
+
+def cache_shardings(cfg: ModelConfig, abstract_cache, mesh: Mesh,
+                    batch: int):
+    """KV-cache shardings; falls back to sequence-parallel when batch=1."""
+    r = make_rules(mesh)
+    dp = r.dp or None
+    tp = r.tp or None
+    import math
+    dp_size = math.prod(mesh.shape[a] for a in (r.dp or ())) if dp else 1
+    batch_ok = dp is not None and batch % max(dp_size, 1) == 0
+
+    tp_size = math.prod(mesh.shape[a] for a in (r.tp or ())) if tp else 1
+
+    def assign(path, leaf):
+        key = _path_key(path)
+        name = key.split("/")[-1]
+        nd = len(leaf.shape)
+        if name == "pos":
+            return NamedSharding(mesh, P())
+        bdim = dp if batch_ok else None
+        if name in ("k", "v"):
+            # [L, B, C, Hkv, dh]. KV heads rarely divide the model axis;
+            # shard the *sequence* dim over model instead (context-parallel
+            # decode attention — softmax reductions become psums).
+            if cfg.padded_kv_heads % tp_size == 0 and tp_size > 1:
+                kv_heads_dim, seq_dim = tp, (None if batch_ok else dp)
+            else:
+                kv_heads_dim, seq_dim = None, (tp if batch_ok
+                                               else (dp or ()) + (tp or ()))
+            return NamedSharding(
+                mesh, sanitize_spec(P(None, bdim, seq_dim, kv_heads_dim,
+                                      None), leaf.shape, mesh))
+        if name == "s":         # rwkv state [L, B, H, N, N]
+            # batch shardable: heads over tp; batch=1: heads over dp
+            hdim = tp if batch_ok else dp
+            return NamedSharding(mesh, sanitize_spec(
+                P(None, bdim, hdim, None, None), leaf.shape, mesh))
+        if name in ("k_scale", "v_scale"):   # [L, B, C, Hkv]
+            if cfg.padded_kv_heads % tp_size == 0 and tp_size > 1:
+                return NamedSharding(mesh, sanitize_spec(
+                    P(None, bdim, None, tp), leaf.shape, mesh))
+            seq_dim = tp if batch_ok else (dp or ()) + (tp or ())
+            return NamedSharding(mesh, sanitize_spec(
+                P(None, bdim, seq_dim, None), leaf.shape, mesh))
+        if name in ("tm_x", "cm_x"):   # [L, B, D]
+            return NamedSharding(mesh, sanitize_spec(
+                P(None, bdim, None), leaf.shape, mesh))
+        if name == "ssm_h":     # [L, B, di, ds]
+            return NamedSharding(mesh, sanitize_spec(
+                P(None, bdim, tp, None), leaf.shape, mesh))
+        if name == "conv":      # [L, B, K-1, di]
+            return NamedSharding(mesh, P(None, bdim, None, tp))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_cache)

@@ -1,0 +1,110 @@
+"""Dynamic rate matching + elastic scaling + straggler mitigation (§4.3).
+
+The paper's Fig 9-10 finding: the optimal ctx:gen chip ratio moves with
+traffic and latency targets, so a fixed split loses Pareto area. The
+``ElasticRateMatcher`` watches queue depth vs decode occupancy and migrates
+engines between pools at runtime (an engine is role-free: moving it is a
+list operation + cache reset). It also:
+
+  - replaces failed engines' capacity by re-balancing the survivors,
+  - drains stragglers: engines whose step-time EWMA exceeds
+    ``straggler_factor`` x the pool median are demoted (their requests
+    re-queue), mirroring the trainer-side StragglerMonitor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import List, Optional
+
+from repro.serving.engine import Engine
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    check_every: int = 8              # scheduling rounds between checks
+    queue_high: int = 4               # prefill backlog -> grow prefill pool
+    occupancy_high: float = 0.9       # decode slots busy -> grow decode pool
+    min_pool: int = 1
+    straggler_factor: float = 4.0
+
+
+class ElasticRateMatcher:
+    def __init__(self, cfg: ElasticConfig = ElasticConfig()):
+        self.cfg = cfg
+        self._round = 0
+        self.moves: List[str] = []
+
+    # -- failure handling -------------------------------------------------
+
+    def on_failure(self, orch, dead: Engine):
+        """Dead engine: drop from its pool; re-balance if a pool emptied."""
+        for pool in (orch.prefill_pool, orch.decode_pool):
+            if dead in pool:
+                pool.remove(dead)
+        if not orch.prefill_pool and orch.decode_pool:
+            self._move(orch, orch.decode_pool, orch.prefill_pool, "failover")
+        if not orch.decode_pool and orch.prefill_pool:
+            self._move(orch, orch.prefill_pool, orch.decode_pool, "failover")
+
+    # -- periodic re-balance ----------------------------------------------
+
+    def maybe_rebalance(self, orch):
+        self._round += 1
+        if self._round % self.cfg.check_every:
+            return
+        self._drain_stragglers(orch)
+        backlog = len([r for r in orch.queue if r.arrival_t <= orch.now])
+        dec = [e for e in orch.decode_pool if e.healthy]
+        pre = [e for e in orch.prefill_pool if e.healthy]
+        occupancy = (sum(e.active for e in dec)
+                     / max(sum(e.slots for e in dec), 1))
+        if (backlog >= self.cfg.queue_high
+                and len(dec) > self.cfg.min_pool and occupancy < 0.5):
+            self._move(orch, orch.decode_pool, orch.prefill_pool,
+                       f"backlog={backlog}")
+        elif (occupancy >= self.cfg.occupancy_high and backlog == 0
+                and len(pre) > self.cfg.min_pool):
+            self._move(orch, orch.prefill_pool, orch.decode_pool,
+                       f"occupancy={occupancy:.2f}")
+
+    def _move(self, orch, src: List[Engine], dst: List[Engine], why: str):
+        # migrate an idle (or least-loaded) healthy engine
+        cands = [e for e in src if e.healthy]
+        if not cands:
+            return
+        eng = min(cands, key=lambda e: e.active)
+        for slot, req in list(eng.slot_req.items()):
+            req.slot = None
+            req.engine_id = None
+            req.output.clear()
+            req.first_token_t = None
+            req.token_times.clear()
+            orch.queue.insert(0, req)
+            orch.stats.requeued += 1
+            eng.evict(slot)
+        src.remove(eng)
+        dst.append(eng)
+        self.moves.append(f"{eng.engine_id}:{why}")
+
+    def _drain_stragglers(self, orch):
+        for pool in (orch.prefill_pool, orch.decode_pool):
+            healthy = [e for e in pool if e.healthy and e.step_times]
+            if len(healthy) < 2:
+                continue
+            # reference = fastest healthy engine (a median over small pools
+            # would be dragged up by the straggler itself)
+            ref = min(e.mean_step_s for e in healthy)
+            for e in healthy:
+                if ref > 0 and e.mean_step_s > self.cfg.straggler_factor * ref:
+                    for slot, req in list(e.slot_req.items()):
+                        req.slot = None
+                        req.output.clear()
+                        req.first_token_t = None
+                        req.token_times.clear()
+                        orch.queue.insert(0, req)
+                        orch.stats.requeued += 1
+                        e.evict(slot)
+                    pool.remove(e)
+                    orch.stats.drained_stragglers += 1
+                    self.moves.append(f"{e.engine_id}:straggler")

@@ -1,0 +1,242 @@
+"""Executable serving engines: prefill and decode on real devices.
+
+One ``Engine`` = one model instance (params + jit'd step functions) playing a
+*role* (prefill / decode / colocated). Engines are role-reassignable at
+runtime — that is what makes elastic scaling (serving/elastic.py) a pool-list
+operation rather than a redeploy.
+
+Decode uses fixed-slot continuous batching: a [B_slots]-wide cache with
+per-slot positions (transformer.decode_step takes pos as a vector), requests
+inserted into free slots as others complete (IFB). KV handoff from a prefill
+engine is ``insert_kv`` — a jit'd scatter of the prefill cache into the slot
+(in-process stand-in for the ICI/DCN transfer; the paper's Eq 1-2 bandwidth
+analysis of this hop lives in core/kv_transfer.py).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+class EngineFailure(RuntimeError):
+    pass
+
+
+class PrefixCache:
+    """KV-cache reuse across requests sharing prompt prefixes (the paper's
+    §7 "KV cache reuse" direction, cf. Mooncake/SGLang radix caching).
+
+    Entries map a prompt-token prefix (chunk-aligned) to its KV cache; a new
+    prompt resumes chunked prefill from the longest cached prefix."""
+
+    def __init__(self, chunk: int, max_entries: int = 16):
+        self.chunk = chunk
+        self.max_entries = max_entries
+        self._entries = []          # [(tokens_tuple, cache)], LRU order
+        self.hits = 0
+        self.hit_tokens = 0
+        self.misses = 0
+
+    def lookup(self, prompt: np.ndarray):
+        """Longest chunk-aligned *common* prefix with any cached entry ->
+        (cache, length) or (None, 0). Positions beyond the common prefix in
+        the reused cache are overwritten by the resumed chunked prefill and
+        causally masked meanwhile, so partial reuse is exact."""
+        best, best_len = None, 0
+        pt = np.asarray(prompt)
+        for toks, cache in self._entries:
+            k = np.asarray(toks)
+            m = min(len(k), len(pt))
+            neq = np.nonzero(k[:m] != pt[:m])[0]
+            common = int(neq[0]) if len(neq) else m
+            common = (common // self.chunk) * self.chunk
+            # need at least one suffix chunk left to process
+            if common >= len(pt):
+                common = len(pt) - self.chunk
+            if common > best_len:
+                best, best_len = cache, common
+        if best is None or best_len <= 0:
+            self.misses += 1
+            return None, 0
+        self.hits += 1
+        self.hit_tokens += best_len
+        return best, best_len
+
+    def insert(self, prompt: np.ndarray, cache):
+        n = (len(prompt) // self.chunk) * self.chunk
+        if n == 0:
+            return
+        key = tuple(int(t) for t in prompt[:n])
+        self._entries = [(t, c) for t, c in self._entries if t != key]
+        self._entries.append((key, cache))
+        if len(self._entries) > self.max_entries:
+            self._entries.pop(0)
+
+
+class Engine:
+    """One model instance. Thread-unsafe by design (driven by Orchestrator)."""
+
+    def __init__(self, engine_id: int, cfg: ModelConfig, params,
+                 *, slots: int = 8, capacity: int = 256,
+                 chunk_size: int = 0):
+        self.engine_id = engine_id
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.capacity = capacity
+        self.chunk_size = chunk_size
+        self.healthy = True
+        self.clock = 0.0                       # engine-local clock (s)
+        self.step_times: List[float] = []
+        self._slow_factor = 1.0                # straggler injection (tests)
+
+        self._prefill = jax.jit(
+            lambda p, i: T.prefill_full(p, cfg, i, capacity=capacity))
+        self.prefix_cache = (PrefixCache(chunk_size) if chunk_size
+                             and cfg.block == "attn" else None)
+        self._decode = jax.jit(lambda p, c, t: T.decode_step(p, cfg, c, t))
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._free: List[int] = list(range(slots))
+        self.cache = T.init_cache(cfg, slots, capacity)
+        self.slot_req: Dict[int, Any] = {}
+
+    # ---- fault/straggler injection hooks (used by tests & demos) -------
+
+    def fail(self):
+        self.healthy = False
+
+    def slow_down(self, factor: float):
+        self._slow_factor = factor
+
+    def _tick(self, t0: float):
+        dt = (time.perf_counter() - t0) * self._slow_factor
+        self.clock += dt
+        self.step_times.append(dt)
+        return dt
+
+    def _check(self):
+        if not self.healthy:
+            raise EngineFailure(f"engine {self.engine_id} is down")
+
+    # ---- prefill role ---------------------------------------------------
+
+    def prefill(self, prompt: np.ndarray) -> Tuple[int, Any]:
+        """Full prefill of one prompt; returns (first_token, cache B=1)."""
+        self._check()
+        t0 = time.perf_counter()
+        inputs = {"tokens": jnp.asarray(prompt)[None, :]}
+        logits, cache = self._prefill(self.params, inputs)
+        tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
+        jax.block_until_ready(tok)
+        self._tick(t0)
+        return tok, cache
+
+    def prefill_chunked(self, prompt: np.ndarray, chunk: int,
+                        on_chunk=None) -> Tuple[int, Any]:
+        """Sarathi-style chunked prefill (the executable piggyback path);
+        on_chunk(i, n) fires after each chunk (lets a co-located engine
+        interleave decode steps between chunks). Reuses the longest cached
+        prompt prefix when a PrefixCache is attached (§7 KV reuse)."""
+        self._check()
+        S = len(prompt)
+        pad = (-S) % chunk
+        toks = np.pad(prompt, (0, pad), constant_values=0)
+        start, base_cache = 0, None
+        if self.prefix_cache is not None:
+            base_cache, start = self.prefix_cache.lookup(prompt)
+        t0 = time.perf_counter()
+        inputs = {"tokens": jnp.asarray(toks)[None, :]}
+        logits, cache = jax.jit(
+            lambda p, i, c: T.prefill_chunked(
+                p, self.cfg, i, chunk, capacity=self.capacity,
+                cache=c, start=start),
+            static_argnames=()) (
+            self.params, inputs, base_cache) if base_cache is not None else             jax.jit(lambda p, i: T.prefill_chunked(
+                p, self.cfg, i, chunk, capacity=self.capacity))(
+                self.params, inputs)
+        tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
+        self._tick(t0)
+        if self.prefix_cache is not None:
+            # cache holds padded length; record true prompt for exact reuse
+            self.prefix_cache.insert(prompt, cache)
+        if on_chunk:
+            for i in range((S - start + pad) // chunk):
+                on_chunk(i, max((S - start + pad) // chunk, 1))
+        return tok, cache
+
+    # ---- decode role ----------------------------------------------------
+
+    def _insert_impl(self, dest, src, slot, length):
+        """Scatter a B=1 prefill cache into decode slot `slot`."""
+        out = dict(dest)
+        for k in dest:
+            if k == "pos":
+                out[k] = dest[k].at[slot].set(length)
+            elif k in ("k", "v"):
+                Cs = src[k].shape[2]
+                Cd = dest[k].shape[2]
+                pad = Cd - Cs
+                row = src[k][:, 0]
+                if pad > 0:
+                    row = jnp.concatenate(
+                        [row, jnp.zeros((row.shape[0], pad) + row.shape[2:],
+                                        row.dtype)], axis=1)
+                elif pad < 0:
+                    row = row[:, :Cd]
+                out[k] = dest[k].at[:, slot].set(row)
+            else:
+                out[k] = dest[k].at[:, slot].set(src[k][:, 0])
+        return out
+
+    def has_free_slot(self) -> bool:
+        return bool(self._free)
+
+    @property
+    def active(self) -> int:
+        return len(self.slot_req)
+
+    def insert(self, req, cache_b1) -> int:
+        """KV handoff: place a prefilled request into a free slot."""
+        self._check()
+        slot = self._free.pop()
+        length = cache_b1["pos"][0]
+        src = {k: v for k, v in cache_b1.items() if k != "pos"}
+        self.cache = self._insert(self.cache, src, slot, length)
+        self.slot_req[slot] = req
+        req.slot = slot
+        req.engine_id = self.engine_id
+        return slot
+
+    def evict(self, slot: int):
+        req = self.slot_req.pop(slot, None)
+        if req is not None:
+            req.slot = None
+        self._free.append(slot)
+
+    def decode_step(self, tokens_by_slot: Dict[int, int]) -> Dict[int, int]:
+        """One token for every active slot. Returns slot -> next token."""
+        self._check()
+        t0 = time.perf_counter()
+        toks = np.zeros((self.slots,), np.int32)
+        for s, t in tokens_by_slot.items():
+            toks[s] = t
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks))
+        nxt = np.asarray(jnp.argmax(logits[:, :self.cfg.vocab_size], axis=-1))
+        jax.block_until_ready(nxt)
+        self._tick(t0)
+        return {s: int(nxt[s]) for s in tokens_by_slot}
+
+    @property
+    def mean_step_s(self) -> float:
+        if not self.step_times:
+            return 0.0
+        return float(np.mean(self.step_times[-50:]))

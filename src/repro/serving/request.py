@@ -1,0 +1,103 @@
+"""Request lifecycle + traffic generation for the executable serving runtime."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.traffic import DynamicTraffic, TrafficPattern
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # int32 [isl]
+    osl: int                        # tokens to generate
+    arrival_t: float = 0.0
+    # lifecycle timestamps (engine clock, seconds)
+    prefill_start_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    done_t: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    output: List[int] = dataclasses.field(default_factory=list)
+    # runtime bookkeeping
+    engine_id: Optional[int] = None
+    slot: Optional[int] = None
+    prefill_progress: int = 0       # chunked-prefill offset
+
+    @property
+    def isl(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def ftl(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.arrival_t
+
+    @property
+    def ttls(self) -> List[float]:
+        ts = [self.first_token_t] + self.token_times if self.first_token_t \
+            else self.token_times
+        return [b - a for a, b in zip(ts, ts[1:])]
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.osl
+
+
+class TrafficGen:
+    """Poisson arrivals with constant or lognormal-sampled ISL/OSL."""
+
+    def __init__(self, *, vocab: int, rate: float,
+                 pattern: Optional[TrafficPattern] = None,
+                 dynamic: Optional[DynamicTraffic] = None, seed: int = 0):
+        assert pattern or dynamic
+        self.vocab = vocab
+        self.rate = rate
+        self.pattern = pattern
+        self.dynamic = dynamic
+        self.rng = np.random.default_rng(seed)
+        self._ids = itertools.count()
+
+    def generate(self, horizon_s: float, max_requests: int = 10_000
+                 ) -> List[Request]:
+        t = 0.0
+        out = []
+        while t < horizon_s and len(out) < max_requests:
+            t += self.rng.exponential(1.0 / self.rate)
+            if self.dynamic is not None:
+                (isl, osl), = self.dynamic.sample(1, seed=int(
+                    self.rng.integers(1 << 30)))
+            else:
+                isl, osl = self.pattern.isl, self.pattern.osl
+            prompt = self.rng.integers(
+                0, self.vocab, size=isl).astype(np.int32)
+            out.append(Request(rid=next(self._ids), prompt=prompt,
+                               osl=osl, arrival_t=t))
+        return out
+
+
+def percentile(xs: List[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs), p))
+
+
+def sla_metrics(requests: List[Request]) -> Dict[str, float]:
+    done = [r for r in requests if r.done_t is not None]
+    ftls = [r.ftl for r in done if r.ftl is not None]
+    ttls = [t for r in done for t in r.ttls]
+    total_tokens = sum(len(r.output) for r in done)
+    span = max((r.done_t for r in done), default=0.0) or 1e-9
+    return {
+        "completed": len(done),
+        "p50_ftl_s": percentile(ftls, 50),
+        "p99_ftl_s": percentile(ftls, 99),
+        "p50_ttl_s": percentile(ttls, 50),
+        "p99_ttl_s": percentile(ttls, 99),
+        "tokens_per_s": total_tokens / span,
+        "tps_per_user": 1.0 / percentile(ttls, 50) if ttls else 0.0,
+    }

@@ -1,0 +1,88 @@
+"""Speculative decoding (the paper's §7 'speculation' future-work item).
+
+Greedy speculative sampling: a small draft model proposes k tokens
+autoregressively; the target model scores all k in ONE verify pass
+(transformer.verify_chunk) and accepts the longest prefix matching its own
+greedy choices, emitting its correction token at the first mismatch. Output
+is therefore *exactly* the target model's greedy decode (tested), while the
+target runs once per ~(accepted+1) tokens — the decode-pool TTL lever the
+paper lists as future work.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def speculative_decode(target_params, target_cfg: ModelConfig,
+                       draft_params, draft_cfg: ModelConfig,
+                       prompt: np.ndarray, n_tokens: int, k: int = 4
+                       ) -> Tuple[List[int], dict]:
+    """Greedy speculative decode of `n_tokens`. Returns (tokens, stats)."""
+    V = target_cfg.vocab_size
+    cap = len(prompt) + n_tokens + k + 1
+    lg_t, cache_t = T.prefill_full(target_params, target_cfg,
+                                   {"tokens": jnp.asarray(prompt)[None]},
+                                   capacity=cap)
+    lg_d, cache_d = T.prefill_full(draft_params, draft_cfg,
+                                   {"tokens": jnp.asarray(prompt)[None]},
+                                   capacity=cap)
+    out = [int(jnp.argmax(lg_t[0, :V]))]
+    pos = len(prompt)            # target cache holds [0, pos)
+    draft_pos = len(prompt)
+    stats = {"target_calls": 1, "draft_calls": 0, "proposed": 0,
+             "accepted": 0}
+
+    while len(out) < n_tokens:
+        # 1) draft proposes k tokens autoregressively from `out[-1]`
+        proposal = []
+        tok = out[-1]
+        cd = cache_d
+        for _ in range(k):
+            lg, cd = T.decode_step(draft_params, draft_cfg, cd,
+                                   jnp.asarray([tok], jnp.int32))
+            stats["draft_calls"] += 1
+            tok = int(jnp.argmax(lg[0, :V]))
+            proposal.append(tok)
+        # 2) target verifies [out[-1], proposal[:-1]] in one pass:
+        #    logits[i] scores position pos+i -> greedy next for prefix+i
+        verify_toks = jnp.asarray([[out[-1]] + proposal[:-1]], jnp.int32)
+        logits, cache_t = T.verify_chunk(target_params, target_cfg, cache_t,
+                                         verify_toks, pos)
+        stats["target_calls"] += 1
+        stats["proposed"] += len(proposal)
+        greedy = [int(t) for t in jnp.argmax(logits[0, :, :V], axis=-1)]
+        n_acc = 0
+        for i in range(k):
+            if greedy[i] == proposal[i]:
+                n_acc += 1
+            else:
+                break
+        accepted = proposal[:n_acc]
+        if n_acc < k:
+            accepted = accepted + [greedy[n_acc]]   # target's correction
+        stats["accepted"] += n_acc
+        out.extend(accepted)
+        pos += n_acc + (1 if n_acc < k else 0)
+        # target cache now holds [0, pos_written); pos tracks accepted length
+        cache_t = dict(cache_t)
+        cache_t["pos"] = jnp.full_like(cache_t["pos"], pos)
+        # 3) draft cache: keep only the accepted prefix; rewind by replaying
+        #    (cheap: draft is small). Rebuild from accepted history tail.
+        if n_acc == k:
+            cache_d = cd                    # fully accepted: draft in sync
+            draft_pos += k
+        else:
+            hist = np.concatenate([np.asarray(prompt, np.int32),
+                                   np.asarray(out, np.int32)])
+            _, cache_d = T.prefill_full(
+                draft_params, draft_cfg,
+                {"tokens": jnp.asarray(hist[:-1])[None]}, capacity=cap)
+            draft_pos = len(hist) - 1
+    return out[:n_tokens], stats

@@ -1,0 +1,150 @@
+"""Pure-JAX optimizers: AdamW and Adafactor (factored, for >=100B params).
+
+Adafactor keeps O(rows+cols) second-moment state for matrices instead of
+O(rows*cols) — the difference between kimi-k2 (1T params) fitting a 256-chip
+pod or not (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, f32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(f32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(f32) * scale).astype(x.dtype),
+                        tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, f32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step):
+        count = state["count"] + 1
+        lr = lr_fn(step)
+        bc1 = 1 - b1 ** count.astype(f32)
+        bc2 = 1 - b2 ** count.astype(f32)
+
+        def upd(g, m, v, p):
+            g = g.astype(f32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(f32)
+            return (p.astype(f32) - lr * delta).astype(p.dtype), m2, v2
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(g, m, v, p)
+                for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), no-momentum variant
+
+
+def adafactor(lr_fn, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], f32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], f32)}
+            return {"v": jnp.zeros(p.shape, f32)}
+        return {"s": jax.tree.map(st, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step):
+        count = state["count"] + 1
+        lr = lr_fn(step)
+        beta = 1.0 - (count.astype(f32) + 1.0) ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(f32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta * s["v"] + (1 - beta) * g2
+                new_s = {"v": vhat}
+            u = g / jnp.sqrt(vhat + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            delta = u + weight_decay * p.astype(f32)
+            return (p.astype(f32) - lr * delta).astype(p.dtype), new_s
+
+        is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["s"])
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_s = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        return new_params, {"s": new_s, "count": count}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr: float = 3e-4, warmup: int = 100,
+                   total: int = 10_000) -> Optimizer:
+    lr_fn = cosine_schedule(lr, warmup, total)
+    if name == "adamw":
+        return adamw(lr_fn)
+    if name == "adafactor":
+        return adafactor(lr_fn)
+    raise ValueError(f"unknown optimizer {name!r}")

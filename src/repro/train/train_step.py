@@ -1,0 +1,70 @@
+"""Train step factory: loss + grad (accumulated over microbatches) + update.
+
+Gradient accumulation runs as a ``lax.scan`` over microbatches with fp32
+accumulators — the standard memory lever that makes the 100B+ train cells fit
+(activation working set scales with microbatch, not global batch).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train.optimizer import Optimizer, clip_by_global_norm
+
+f32 = jnp.float32
+
+
+def _split_microbatches(batch: Dict[str, Any], accum: int):
+    def sp(x):
+        B = x.shape[0]
+        assert B % accum == 0, (B, accum)
+        return x.reshape(accum, B // accum, *x.shape[1:])
+    return {k: sp(v) for k, v in batch.items()}
+
+
+def loss_and_grad(params, cfg: ModelConfig, batch):
+    """Full-batch (or accumulated) loss and fp32 grads."""
+    def lfn(p, mb):
+        return T.train_loss(p, cfg, mb)
+
+    if cfg.grad_accum <= 1:
+        (loss, metrics), grads = jax.value_and_grad(lfn, has_aux=True)(
+            params, batch)
+        grads = jax.tree.map(lambda g: g.astype(f32), grads)
+        return loss, metrics, grads
+
+    mbs = _split_microbatches(batch, cfg.grad_accum)
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+
+    def body(carry, mb):
+        g_acc, loss_acc = carry
+        (loss, metrics), g = jax.value_and_grad(lfn, has_aux=True)(params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(f32), g_acc, g)
+        return (g_acc, loss_acc + loss), metrics
+
+    (g_acc, loss_sum), metrics = jax.lax.scan(
+        body, (zero_g, jnp.zeros((), f32)), mbs)
+    n = cfg.grad_accum
+    grads = jax.tree.map(lambda g: g / n, g_acc)
+    metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+    return loss_sum / n, metrics, grads
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, max_grad_norm: float = 1.0):
+    """Returns train_step(params, opt_state, batch, step) -> (params,
+    opt_state, metrics). jit/pjit-able; this is what the dry-run lowers."""
+
+    def train_step(params, opt_state, batch, step):
+        loss, metrics, grads = loss_and_grad(params, cfg, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm})
+        return params, opt_state, metrics
+
+    return train_step

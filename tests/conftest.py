@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests run on the host's real device list (1 CPU device) — the dry-run
+# (and only the dry-run) forces 512 host devices in its own process.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,113 @@
+"""Per-kernel shape/dtype sweeps: pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.rwkv6.ops import wkv
+from repro.kernels.rwkv6.ref import wkv_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,Hkv,dh,causal,off", [
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 256, 256, 4, 4, 128, True, 0),
+    (2, 64, 192, 2, 1, 64, True, 128),      # chunked prefill offset
+    (1, 128, 128, 8, 2, 64, False, 0),
+    (1, 512, 512, 2, 1, 128, True, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, Sq, Skv, H, Hkv, dh, causal, off, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, dh), dtype)
+    out = flash_attention(q, k, v, causal=causal, q_offset=off,
+                          block_q=64, block_kv=64, interpret=True)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=causal, q_offset=off)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, atol=tol(dtype),
+                               rtol=tol(dtype))
+
+
+@pytest.mark.parametrize("B,Smax,H,Hkv,dh,bk", [
+    (2, 256, 8, 2, 64, 64),
+    (3, 512, 4, 4, 128, 128),
+    (2, 128, 16, 1, 64, 64),
+    (1, 1024, 8, 8, 64, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, Smax, H, Hkv, dh, bk, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    kc = jax.random.normal(ks[1], (B, Smax, Hkv, dh), dtype)
+    vc = jax.random.normal(ks[2], (B, Smax, Hkv, dh), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, Smax + 1)
+    out = decode_attention(q, kc, vc, lengths, block_kv=bk, interpret=True)
+    ref = decode_attention_ref(q.astype(jnp.float32), kc.astype(jnp.float32),
+                               vc.astype(jnp.float32), lengths)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, atol=tol(dtype),
+                               rtol=tol(dtype))
+
+
+def test_decode_attention_length_mask_exact():
+    """Tokens past `length` must not leak: perturbing them changes nothing."""
+    ks = jax.random.split(KEY, 4)
+    B, Smax, H, Hkv, dh = 2, 128, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, H, dh))
+    kc = jax.random.normal(ks[1], (B, Smax, Hkv, dh))
+    vc = jax.random.normal(ks[2], (B, Smax, Hkv, dh))
+    lengths = jnp.array([40, 100])
+    out1 = decode_attention(q, kc, vc, lengths, block_kv=64, interpret=True)
+    kc2 = kc.at[0, 40:].set(99.0)
+    vc2 = vc.at[0, 40:].set(-99.0)
+    out2 = decode_attention(q, kc2, vc2, lengths, block_kv=64, interpret=True)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,S,H,N,chunk", [
+    (2, 128, 2, 64, 32),
+    (1, 96, 4, 32, 32),
+    (2, 64, 2, 64, 64),
+    (1, 160, 2, 64, 32),     # padding path (160 % 64)
+])
+def test_wkv_kernel(B, S, H, N, chunk):
+    ks = jax.random.split(KEY, 6)
+    r = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) - 0.5)
+    u = jax.random.normal(ks[4], (H, N)) * 0.5
+    s0 = jax.random.normal(ks[5], (B, H, N, N)) * 0.1
+    y_k, s_k = wkv(r, k, v, logw, u, s0, chunk=chunk, interpret=True)
+    rr, kk, vv, lw = (a.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+                      for a in (r, k, v, logw))
+    uu = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, N)
+    y_r, s_r = wkv_ref(rr, kk, vv, lw, uu, s0.reshape(B * H, N, N))
+    y_r = y_r.reshape(B, H, S, N).transpose(0, 2, 1, 3)
+    scale = max(float(jnp.max(jnp.abs(y_r))), 1.0)
+    assert float(jnp.max(jnp.abs(y_k - y_r))) / scale < 1e-5
+    assert float(jnp.max(jnp.abs(s_k.reshape(B * H, N, N) - s_r))) < 1e-3
+
+
+def test_wkv_strong_decay_stability():
+    """Strong decays must not overflow (chunked form is exp(<=0) only)."""
+    B, S, H, N = 1, 128, 2, 32
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, N))
+    logw = jnp.full((B, S, H, N), -12.0)         # near-total per-token decay
+    u = jax.random.normal(ks[3], (H, N))
+    s0 = jnp.zeros((B, H, N, N))
+    y, s = wkv(r, k, v, logw, u, s0, chunk=32, interpret=True)
+    assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(s).all())

@@ -1,0 +1,135 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pareto import frontier_at, pareto_frontier
+from repro.core.rate_matching import _round_fraction
+from repro.core.perf_model import Mapping, PerfLLM, decode_step_perf
+from repro.models.config import MoEConfig
+from repro.models.moe import _local_moe, expert_capacity
+from repro.models.layers import _attend_block, _merge
+
+POINTS = st.lists(st.tuples(st.floats(0.1, 1e3), st.floats(0.1, 1e3)),
+                  min_size=1, max_size=60)
+
+
+@given(POINTS)
+@settings(max_examples=80, deadline=None)
+def test_pareto_frontier_dominates_all_points(pts):
+    f = pareto_frontier(pts)
+    # every input point is dominated by the frontier
+    for x, y in pts:
+        assert frontier_at(f, x) >= y - 1e-9
+    # frontier is monotone: increasing x, decreasing y
+    xs = [x for x, _ in f]
+    ys = [y for _, y in f]
+    assert xs == sorted(xs) and ys == sorted(ys, reverse=True)
+    # frontier points are input points
+    assert set(f) <= set(pts)
+
+
+@given(st.floats(0.01, 100.0), st.floats(0.001, 0.2),
+       st.integers(2, 128))
+@settings(max_examples=100, deadline=None)
+def test_round_fraction_within_tolerance(x, tol, maxd):
+    f = _round_fraction(x, tol, maxd)
+    assert f > 0
+    assert f.denominator <= maxd
+    # if ANY positive fraction with denom <= maxd is within tolerance,
+    # the returned one must be too (simplest-first search is complete)
+    achievable = any(
+        abs(int(x * d + 0.5) / d - x) / x <= tol and int(x * d + 0.5) > 0
+        for d in range(1, maxd + 1))
+    if achievable:
+        assert abs(float(f) - x) / x <= tol + 1e-12
+
+
+@given(st.integers(1, 64), st.integers(1, 512), st.integers(1, 8),
+       st.integers(1, 16))
+@settings(max_examples=60, deadline=None)
+def test_expert_capacity_bounds(T, E, k, min_cap):
+    cfg = MoEConfig(num_experts=E, top_k=min(k, E), d_ff_expert=8,
+                    min_capacity=min_cap)
+    C = expert_capacity(T, cfg)
+    assert 1 <= C <= T
+    # with capacity == T nothing can ever drop
+    assert C == T or C >= min(T, min_cap)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_moe_no_drops_at_full_capacity(seed):
+    key = jax.random.PRNGKey(seed)
+    T, D, E, k = 16, 8, 4, 2
+    cfg = MoEConfig(num_experts=E, top_k=k, d_ff_expert=8,
+                    capacity_factor=float(E) / k * 4, min_capacity=T)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (T, D))
+    router = jax.random.normal(ks[1], (D, E)) * 0.1
+    wg = jax.random.normal(ks[2], (E, D, 8)) * 0.1
+    wu = jax.random.normal(ks[3], (E, D, 8)) * 0.1
+    wd = jax.random.normal(ks[4], (E, 8, D)) * 0.1
+    y, aux = _local_moe(x, router, wg, wu, wd, cfg=cfg, ep_axis=None,
+                        dp_axes=())
+    assert float(aux["moe_dropped"]) == 0.0
+    assert bool(jnp.isfinite(y).all())
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_online_softmax_merge_associative(seed, splits):
+    """Merging attention partials must equal single-shot attention."""
+    key = jax.random.PRNGKey(seed)
+    B, Sq, Sk, H, dh = 1, 4, 8 * splits, 2, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, dh))
+    k = jax.random.normal(ks[1], (B, Sk, H, dh))
+    v = jax.random.normal(ks[2], (B, Sk, H, dh))
+    o_all, m_all, l_all = _attend_block(q, k, v, scale=1.0)
+    ref = o_all / l_all.transpose(0, 2, 1)[..., None]
+    # split KV, attend each, merge
+    parts = [_attend_block(q, k[:, i::splits], v[:, i::splits], scale=1.0)
+             for i in range(splits)]
+    o, m, l = parts[0]
+    for p in parts[1:]:
+        o, m, l = _merge(o, m, l, *p)
+    got = o / l.transpose(0, 2, 1)[..., None]
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+@given(st.integers(1, 1024), st.integers(1, 65536))
+@settings(max_examples=50, deadline=None)
+def test_decode_step_time_monotone_in_batch_and_context(batch, kv):
+    m = PerfLLM(name="m", num_layers=4, d_model=256, num_heads=8,
+                num_kv_heads=8, d_ff=1024, vocab_size=1000)
+    mp = Mapping(chips=4, tp=4)
+    t1 = decode_step_perf(m, mp, batch, kv).latency_s
+    t2 = decode_step_perf(m, mp, batch + 1, kv).latency_s
+    t3 = decode_step_perf(m, mp, batch, kv + 512).latency_s
+    assert t2 >= t1 - 1e-12
+    assert t3 >= t1 - 1e-12
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_roundtrip(seed):
+    import tempfile, shutil
+    key = jax.random.PRNGKey(seed)
+    from repro.checkpoint.checkpoint import (restore_checkpoint,
+                                             save_checkpoint)
+    tree = {"a": jax.random.normal(key, (3, 5)),
+            "b": {"c": jax.random.normal(key, (2,), jnp.bfloat16),
+                  "d": jnp.arange(4)}}
+    d = tempfile.mkdtemp()
+    try:
+        save_checkpoint(d, 7, tree)
+        got, step, _ = restore_checkpoint(d, tree)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        shutil.rmtree(d)

@@ -1,0 +1,84 @@
+"""Roofline closed-forms cross-checked against compiled HLO cost_analysis.
+
+Trick: with num_layers=1, grad_accum=1 and logits_chunk >= S every scan in
+the program has trip count 1, so cost_analysis (which counts loop bodies
+once) is *exact* — making the closed forms directly comparable.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.roofline import MeshDesc, Overrides, cell_roofline
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeConfig
+
+CPU_MESH = MeshDesc("cpu1", 1, 1, 1)
+
+
+def _cfg(**kw):
+    base = dict(name="probe", family="dense", num_layers=1, d_model=128,
+                num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
+                remat=False, logits_chunk=4096, dtype="float32",
+                grad_accum=1)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_prefill_flops_closed_form_matches_hlo():
+    cfg = _cfg()
+    B, S = 2, 256
+    shape = ShapeConfig("p", seq_len=S, global_batch=B, kind="prefill")
+    rt = cell_roofline(cfg, shape, CPU_MESH,
+                       Overrides(pad_heads=False, attn_block=1024))
+    params = T.abstract_params(cfg)
+    inputs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    compiled = jax.jit(lambda p, i: T.prefill_full(p, cfg, i)).lower(
+        params, inputs).compile()
+    hlo = compiled.cost_analysis()["flops"]
+    # closed form within 35% of compiled HLO (norms/rope/softmax uncounted)
+    assert 0.65 < rt.hlo_flops / hlo < 1.35, (rt.hlo_flops, hlo)
+
+
+def test_train_flops_closed_form_matches_hlo():
+    cfg = _cfg()
+    B, S = 2, 128
+    shape = ShapeConfig("t", seq_len=S, global_batch=B, kind="train")
+    rt = cell_roofline(cfg, shape, CPU_MESH,
+                       Overrides(pad_heads=False, remat=False,
+                                 attn_block=1024))
+    params = T.abstract_params(cfg)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def loss_grad(p, b):
+        (l, m), g = jax.value_and_grad(
+            lambda pp: T.train_loss(pp, cfg, b), has_aux=True)(p)
+        return l, g
+
+    compiled = jax.jit(loss_grad).lower(params, batch).compile()
+    hlo = compiled.cost_analysis()["flops"]
+    # fwd+2bwd closed form: generous band (XLA bwd schedules differ)
+    assert 0.5 < rt.hlo_flops / hlo < 2.0, (rt.hlo_flops, hlo)
+
+
+def test_dominant_terms_make_sense():
+    cfg = _cfg(num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+               d_ff=8192, vocab_size=32000, dtype="bfloat16")
+    mesh = MeshDesc("16x16", 256, 16, 16)
+    dec = cell_roofline(cfg, ShapeConfig("d", 32768, 128, "decode"), mesh)
+    pre = cell_roofline(cfg, ShapeConfig("p", 32768, 32, "prefill"), mesh)
+    assert dec.dominant == "memory"        # decode streams weights + KV
+    assert pre.dominant == "compute"       # prefill is GEMM-bound
+    assert 0 < dec.roofline_fraction < 1
+    assert 0 < pre.roofline_fraction <= 1
+    assert pre.flops_ratio <= 1.0          # HLO >= useful
+
+
+def test_padding_charged_in_flops_ratio():
+    cfg = _cfg(num_heads=5, num_kv_heads=5)   # 5 heads on a 16-wide axis
+    mesh = MeshDesc("16x16", 256, 16, 16)
+    shp = ShapeConfig("p", 4096, 8, "prefill")
+    padded = cell_roofline(cfg.replace(pad_heads_to=16), shp, mesh)
+    clean = cell_roofline(cfg, shp, mesh, Overrides(pad_heads=False))
+    assert padded.hlo_flops > clean.hlo_flops
+    assert padded.flops_ratio < clean.flops_ratio

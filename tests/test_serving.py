@@ -1,0 +1,190 @@
+"""Serving runtime: disagg correctness, IFB, fault tolerance, elasticity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.traffic import TrafficPattern
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.disagg import ColocatedOrchestrator, DisaggOrchestrator
+from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
+from repro.serving.engine import Engine
+from repro.serving.request import TrafficGen
+
+CFG = ModelConfig(name="serve-tiny", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                  remat=False, logits_chunk=32, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def mk(i, params, slots=4, capacity=48):
+    return Engine(i, CFG, params, slots=slots, capacity=capacity)
+
+
+def gen_requests(n, seed=0, isl=16, osl=8, rate=100.0):
+    g = TrafficGen(vocab=CFG.vocab_size, rate=rate,
+                   pattern=TrafficPattern("t", isl, osl), seed=seed)
+    return g.generate(10.0, max_requests=n)
+
+
+def greedy_reference(params, prompt, osl):
+    lg, cache = T.prefill_full(params, CFG, {"tokens": prompt[None]},
+                               capacity=48)
+    toks = [int(np.argmax(np.asarray(lg)[0]))]
+    for _ in range(osl - 1):
+        lg, cache = T.decode_step(params, CFG, cache,
+                                  jnp.asarray([toks[-1]], jnp.int32))
+        toks.append(int(np.argmax(np.asarray(lg)[0])))
+    return toks
+
+
+def test_disagg_serves_exactly_greedy(params):
+    reqs = gen_requests(6, seed=1)
+    orch = DisaggOrchestrator([mk(0, params)], [mk(1, params)])
+    m = orch.run(reqs, max_wall_s=300)
+    assert m["completed"] == 6
+    assert orch.stats.transfers == 6
+    for r in reqs[:3]:
+        assert r.output == greedy_reference(params, jnp.asarray(r.prompt),
+                                            r.osl), r.rid
+
+
+def test_disagg_ifb_slot_reuse(params):
+    """More requests than slots: IFB must reuse slots as requests finish."""
+    reqs = gen_requests(10, seed=2, osl=4)
+    dec = mk(1, params, slots=3)
+    orch = DisaggOrchestrator([mk(0, params)], [dec])
+    m = orch.run(reqs, max_wall_s=300)
+    assert m["completed"] == 10
+    assert dec.slots == 3           # never grew
+
+
+def test_colocated_chunked_prefill(params):
+    reqs = gen_requests(5, seed=3)
+    orch = ColocatedOrchestrator([mk(0, params)], piggyback_chunk=8)
+    m = orch.run(reqs, max_wall_s=300)
+    assert m["completed"] == 5
+
+
+def test_decode_engine_failure_requeues(params):
+    reqs = gen_requests(8, seed=4, osl=6)
+    e_d1, e_d2 = mk(1, params), mk(2, params)
+    orch = DisaggOrchestrator([mk(0, params)], [e_d1, e_d2],
+                              elastic=ElasticRateMatcher())
+    fired = [False]
+    orig = e_d1.decode_step
+    def flaky(toks):
+        if len(e_d1.step_times) >= 2 and not fired[0]:
+            fired[0] = True
+            e_d1.fail()
+        return orig(toks)
+    e_d1.decode_step = flaky
+    m = orch.run(reqs, max_wall_s=600)
+    assert m["completed"] == 8
+    assert orch.stats.engine_failures == 1
+    assert orch.stats.requeued >= 1
+    assert e_d1 not in orch.decode_pool
+
+
+def test_prefill_engine_failure_failover(params):
+    """Losing the only prefill engine must trigger pool failover."""
+    reqs = gen_requests(4, seed=5, osl=4)
+    e_p = mk(0, params)
+    orch = DisaggOrchestrator([e_p], [mk(1, params), mk(2, params)],
+                              elastic=ElasticRateMatcher())
+    orig = e_p.prefill
+    fired = [False]
+    def flaky(prompt):
+        if len(e_p.step_times) >= 1 and not fired[0]:
+            fired[0] = True
+            e_p.fail()
+        return orig(prompt)
+    e_p.prefill = flaky
+    m = orch.run(reqs, max_wall_s=600)
+    assert m["completed"] == 4
+    assert len(orch.prefill_pool) >= 1     # failover moved an engine over
+
+
+def test_straggler_drained(params):
+    reqs = gen_requests(16, seed=6, osl=12)
+    e_d1, e_d2 = mk(1, params), mk(2, params)
+    e_d1.slow_down(200.0)                   # inject a hard straggler
+    orch = DisaggOrchestrator(
+        [mk(0, params)], [e_d1, e_d2],
+        elastic=ElasticRateMatcher(ElasticConfig(check_every=1,
+                                                 straggler_factor=5.0)))
+    m = orch.run(reqs, max_wall_s=600)
+    assert m["completed"] == 16
+    assert orch.stats.drained_stragglers >= 1
+    assert e_d1 not in orch.decode_pool
+
+
+def test_elastic_grows_prefill_pool_under_backlog(params):
+    # heavy arrivals, all at t=0 -> backlog -> decode engine migrates
+    reqs = gen_requests(12, seed=7, osl=3, rate=1e6)
+    orch = DisaggOrchestrator(
+        [mk(0, params)], [mk(1, params), mk(2, params), mk(3, params)],
+        elastic=ElasticRateMatcher(ElasticConfig(check_every=1,
+                                                 queue_high=3)))
+    m = orch.run(reqs, max_wall_s=600)
+    assert m["completed"] == 12
+    assert orch.stats.requeued >= 0
+    assert len(orch.prefill_pool) + len(orch.decode_pool) == 4
+
+
+def test_rwkv_family_serves(params):
+    """Disaggregation applies to attention-free archs: state handoff."""
+    cfg = ModelConfig(name="rwkv-serve", family="ssm", block="rwkv",
+                      num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+                      d_ff=128, vocab_size=97, remat=False, logits_chunk=32,
+                      dtype="float32")
+    p = T.init_params(cfg, jax.random.PRNGKey(1))
+    pre = Engine(0, cfg, p, slots=4, capacity=48)
+    dec = Engine(1, cfg, p, slots=4, capacity=48)
+    g = TrafficGen(vocab=97, rate=100.0,
+                   pattern=TrafficPattern("t", 12, 5), seed=8)
+    reqs = g.generate(5.0, max_requests=4)
+    orch = DisaggOrchestrator([pre], [dec])
+    m = orch.run(reqs, max_wall_s=300)
+    assert m["completed"] == 4
+    assert orch.stats.transferred_bytes > 0
+
+
+def test_prefix_cache_reuse_exact(params):
+    """KV-cache reuse (paper §7): shared prefixes skip recompute, exactly."""
+    eng = Engine(50, CFG, params, slots=2, capacity=48, chunk_size=8)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, CFG.vocab_size, 24).astype(np.int32)
+    p1 = np.concatenate([shared, rng.integers(0, CFG.vocab_size, 8).astype(np.int32)])
+    p2 = np.concatenate([shared, rng.integers(0, CFG.vocab_size, 8).astype(np.int32)])
+    t1, _ = eng.prefill_chunked(p1, 8)
+    t2, c2 = eng.prefill_chunked(p2, 8)
+    assert eng.prefix_cache.hits == 1
+    assert eng.prefix_cache.hit_tokens == 24
+    t_ref, _ = eng.prefill(p2)
+    assert t2 == t_ref
+
+
+def test_speculative_decode_exact_and_accepts(params):
+    """Speculation (paper §7): exact greedy equivalence; self-draft accepts
+    everything (k tokens per target call)."""
+    from repro.serving.speculative import speculative_decode
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, CFG.vocab_size, 12).astype(np.int32)
+    N, k = 12, 4
+    # self-speculation: draft == target -> 100% acceptance
+    toks, stats = speculative_decode(params, CFG, params, CFG, prompt, N, k=k)
+    lg, c = T.prefill_full(params, CFG, {"tokens": jnp.asarray(prompt)[None]},
+                           capacity=64)
+    ref = [int(np.argmax(np.asarray(lg)[0, :CFG.vocab_size]))]
+    for _ in range(N - 1):
+        lg, c = T.decode_step(params, CFG, c, jnp.asarray([ref[-1]], jnp.int32))
+        ref.append(int(np.argmax(np.asarray(lg)[0, :CFG.vocab_size])))
+    assert toks == ref
+    assert stats["accepted"] == stats["proposed"]      # self-draft: all accepted
+    assert stats["target_calls"] <= 1 + (N + k - 1) // k + 1
