@@ -1,0 +1,76 @@
+"""Scheduler/router policy comparison on the executable Cluster runtime.
+
+Runs the same mixed traffic (long low-priority prefills + short urgent
+requests) through several policy configurations of the same engine fleet and
+prints one CSV row per configuration — the runtime analogue of the paper's
+point that policy, not pipeline, is the unit of experimentation:
+
+  PYTHONPATH=src python benchmarks/serving_policies.py
+
+Columns: policy, completed, p50_ftl_s, p99_ftl_s, urgent_p99_ftl_s,
+p99_ttl_s, sla_attainment, queue_wait_s, transfers.
+"""
+import sys
+
+import numpy as np
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    import jax
+
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+    from repro.serving.cluster import Cluster
+    from repro.serving.engine import Engine
+    from repro.serving.policies import (FCFSScheduler, LeastLoadedRouter,
+                                        PriorityScheduler, RoundRobinRouter)
+    from repro.serving.request import Request
+
+    cfg = ModelConfig(name="bench-tiny", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=97, remat=False, logits_chunk=32,
+                      dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def traffic():
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, 97, 64).astype(np.int32),
+                        osl=6, priority=0)
+                for i in range(10)]
+        reqs += [Request(rid=100 + i,
+                         prompt=rng.integers(0, 97, 16).astype(np.int32),
+                         osl=6, priority=5, ftl_target_s=0.5)
+                 for i in range(4)]
+        return reqs
+
+    def fleet():
+        return ([Engine(i, cfg, params, slots=4, capacity=96)
+                 for i in range(1)],
+                [Engine(10 + i, cfg, params, slots=4, capacity=96)
+                 for i in range(2)])
+
+    configs = [
+        ("fcfs+round-robin", FCFSScheduler, RoundRobinRouter),
+        ("fcfs+least-loaded", FCFSScheduler, LeastLoadedRouter),
+        ("priority+least-loaded", PriorityScheduler, LeastLoadedRouter),
+    ]
+    print("policy,completed,p50_ftl_s,p99_ftl_s,urgent_p99_ftl_s,"
+          "p99_ttl_s,sla_attainment,queue_wait_s,transfers")
+    for name, sched, router in configs:
+        pre, dec = fleet()
+        cl = Cluster({"prefill": pre, "decode": dec},
+                     scheduler=sched(), router=router())
+        reqs = traffic()
+        m = cl.run(reqs, max_wall_s=600)
+        urgent = [r.ftl for r in reqs if r.priority > 0 and r.ftl is not None]
+        u99 = float(np.percentile(urgent, 99)) if urgent else float("nan")
+        print(f"{name},{m['completed']:.0f},{m['p50_ftl_s']:.4f},"
+              f"{m['p99_ftl_s']:.4f},{u99:.4f},{m['p99_ttl_s']:.4f},"
+              f"{m['sla_attainment']:.3f},{m['queue_wait_s']:.4f},"
+              f"{cl.stats.transfers}")
+
+
+if __name__ == "__main__":
+    main()

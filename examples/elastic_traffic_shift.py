@@ -1,8 +1,10 @@
 """Dynamic rate matching under a traffic shift (paper §4.3, Figs 9-10),
 executable: traffic flips from prefill-heavy to generation-heavy mid-run and
-the elastic rate matcher migrates engines between pools to re-balance —
-the runtime analogue of the analytic finding that the optimal ctx:gen ratio
-moves with traffic.
+the ``ElasticPolicy`` rate matcher migrates engines between role pools to
+re-balance — the runtime analogue of the analytic finding that the optimal
+ctx:gen ratio moves with traffic. A second run pins the split with
+``StaticSplitRateMatcher`` (the analytic Appendix-B alpha held fixed, the
+paper's Fig 10 baseline) to show what *not* adapting costs.
 
   PYTHONPATH=src python examples/elastic_traffic_shift.py
 """
@@ -11,9 +13,10 @@ import jax
 from repro.configs import get_smoke_config
 from repro.core.traffic import TrafficPattern
 from repro.models import transformer as T
-from repro.serving.disagg import DisaggOrchestrator
+from repro.serving.cluster import Cluster
 from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
 from repro.serving.engine import Engine
+from repro.serving.policies import ElasticPolicy, StaticSplitRateMatcher
 from repro.serving.request import TrafficGen
 
 cfg = get_smoke_config("qwen3-14b")
@@ -25,29 +28,41 @@ def engines(ids):
     return [Engine(i, cfg, params, slots=4, capacity=CAP) for i in ids]
 
 
-# phase 1: prefill-heavy (long prompts, short outputs) -> ctx pool starved
-gen1 = TrafficGen(vocab=cfg.vocab_size, rate=1e6,
-                  pattern=TrafficPattern("prefill-heavy", 96, 4), seed=1)
-# phase 2: generation-heavy (short prompts, long outputs) -> gen pool starved
-gen2 = TrafficGen(vocab=cfg.vocab_size, rate=1e6,
-                  pattern=TrafficPattern("gen-heavy", 16, 24), seed=2)
-reqs1 = gen1.generate(60.0, max_requests=8)
-reqs2 = gen2.generate(60.0, max_requests=8)
-for r in reqs2:
-    r.arrival_t += 1e-3   # phase 2 arrives after phase 1
+def traffic():
+    # phase 1: prefill-heavy (long prompts, short outputs) -> ctx pool starved
+    gen1 = TrafficGen(vocab=cfg.vocab_size, rate=1e6,
+                      pattern=TrafficPattern("prefill-heavy", 96, 4), seed=1)
+    # phase 2: generation-heavy (short prompts, long outputs) -> gen starved
+    gen2 = TrafficGen(vocab=cfg.vocab_size, rate=1e6,
+                      pattern=TrafficPattern("gen-heavy", 16, 24), seed=2)
+    reqs1 = gen1.generate(60.0, max_requests=8)
+    reqs2 = gen2.generate(60.0, max_requests=8)
+    for r in reqs2:
+        r.arrival_t += 1e-3   # phase 2 arrives after phase 1
+    return reqs1 + reqs2
 
-elastic = ElasticRateMatcher(ElasticConfig(check_every=2, queue_high=2,
-                                           occupancy_high=0.8))
-orch = DisaggOrchestrator(engines([0]), engines([10, 11, 12]),
-                          elastic=elastic)
+
+# --- dynamic: elastic rate matcher moves engines with the traffic ---------
+elastic = ElasticPolicy(ElasticRateMatcher(ElasticConfig(
+    check_every=2, queue_high=2, occupancy_high=0.8)))
+orch = Cluster({"prefill": engines([0]), "decode": engines([10, 11, 12])},
+               rate_matcher=elastic)
 ratio_before = len(orch.prefill_pool) / len(orch.decode_pool)
-metrics = orch.run(reqs1 + reqs2)
+metrics = orch.run(traffic())
 ratio_after = len(orch.prefill_pool) / max(len(orch.decode_pool), 1)
 
-print("metrics:", {k: round(v, 4) for k, v in metrics.items()})
+print("dynamic :", {k: round(v, 4) for k, v in metrics.items()})
 print(f"ctx:gen engine ratio {ratio_before:.2f} -> {ratio_after:.2f}")
 print(f"elastic moves: {elastic.moves}")
 print(f"requeued during rebalance: {orch.stats.requeued}")
 assert metrics["completed"] == 16
 assert elastic.moves, "expected the rate matcher to migrate engines"
+
+# --- static: the same fleet pinned at the analytic 1:3 split --------------
+static = Cluster({"prefill": engines([20]), "decode": engines([30, 31, 32])},
+                 rate_matcher=StaticSplitRateMatcher(1 / 3))
+m_static = static.run(traffic())
+print("static  :", {k: round(v, 4) for k, v in m_static.items()})
+assert m_static["completed"] == 16
+assert not static.rate_matcher.moves[1:], "static split must not keep moving"
 print("elastic_traffic_shift OK — the ctx:gen ratio adapted at runtime")

@@ -1,9 +1,11 @@
 """End-to-end disaggregated serving driver (the paper's system, executable).
 
-Serves a small model with batched requests through separate prefill/decode
-pools, then repeats the same traffic co-located — demonstrating the §2
-tension on real compute: co-located p99 TTL inflates because decode stalls
-behind prefills; the disaggregated decode pool's TTL tail stays flat. Also
+Builds both of the paper's Fig 2 deployments as *policy configurations* of
+the same ``Cluster`` runtime: disaggregated = separate prefill/decode role
+pools with KV handoff; co-located = one dual-role pool where prefills
+preempt decode. Same traffic through both demonstrates the §2 tension on
+real compute: co-located p99 TTL inflates because decode stalls behind
+prefills; the disaggregated decode pool's TTL tail stays flat. Also
 demonstrates elastic failover by killing a decode engine mid-run.
 
   PYTHONPATH=src python examples/serve_disagg.py
@@ -13,9 +15,10 @@ import jax
 from repro.configs import get_smoke_config
 from repro.core.traffic import TrafficPattern
 from repro.models import transformer as T
-from repro.serving.disagg import ColocatedOrchestrator, DisaggOrchestrator
-from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
+from repro.serving.cluster import Cluster
 from repro.serving.engine import Engine
+from repro.serving.policies import (ElasticPolicy, FCFSScheduler,
+                                    KVLocalityRouter, LeastLoadedRouter)
 from repro.serving.request import TrafficGen
 
 cfg = get_smoke_config("phi3-medium-14b")
@@ -38,17 +41,20 @@ def engines(n, base):
 print(f"== prefill-heavy traffic: ISL={ISL} OSL={OSL}, {N} requests ==")
 
 # --- disaggregated: 1 prefill + 2 decode engines -------------------------
-dis = DisaggOrchestrator(engines(1, 0), engines(2, 10),
-                         elastic=ElasticRateMatcher(ElasticConfig()))
+dis = Cluster({"prefill": engines(1, 0), "decode": engines(2, 10)},
+              scheduler=FCFSScheduler(), router=LeastLoadedRouter(),
+              rate_matcher=ElasticPolicy())
 m_dis = dis.run(traffic(1))
 print("disaggregated:", {k: round(v, 4) for k, v in m_dis.items()})
 print(f"  kv transfers: {dis.stats.transfers} "
       f"({dis.stats.transferred_bytes/2**20:.1f} MiB)")
 
-# --- co-located: 3 engines, whole-prompt prefill preempts decode ---------
-co = ColocatedOrchestrator(engines(3, 20))
+# --- co-located: 3 dual-role engines, prefill preempts decode ------------
+co = Cluster({"mixed": engines(3, 20)},
+             scheduler=FCFSScheduler(), router=KVLocalityRouter())
 m_co = co.run(traffic(2))
 print("co-located   :", {k: round(v, 4) for k, v in m_co.items()})
+assert co.stats.transfers == 0      # KV never leaves the producing engine
 
 tail_dis = m_dis["p99_ttl_s"] / max(m_dis["p50_ttl_s"], 1e-9)
 tail_co = m_co["p99_ttl_s"] / max(m_co["p50_ttl_s"], 1e-9)
@@ -58,7 +64,8 @@ print(f"TTL tail (p99/p50): disagg {tail_dis:.1f}x vs coloc {tail_co:.1f}x "
 # --- fault tolerance: kill a decode engine mid-flight ---------------------
 print("== failure drill: decode engine dies mid-run ==")
 pre, d1, d2 = engines(1, 30)[0], *engines(2, 40)
-orch = DisaggOrchestrator([pre], [d1, d2], elastic=ElasticRateMatcher())
+orch = Cluster({"prefill": [pre], "decode": [d1, d2]},
+               rate_matcher=ElasticPolicy())
 orig = d1.decode_step
 state = {"fired": False}
 def flaky(toks):

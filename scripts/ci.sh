@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI entry point: the tier-1 verify command (ROADMAP.md) plus the per-family
+# model smoke. Run from anywhere; conftest.py also injects src/ so a bare
+# `python -m pytest -x -q` from the repo root collects cleanly.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: all model families =="
+python scripts/dev_smoke.py
+
+echo "CI OK"

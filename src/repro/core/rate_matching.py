@@ -108,6 +108,23 @@ def _round_fraction(x: float, tolerance: float, max_denominator: int
     return best if best > 0 else Fraction(1, max_denominator)
 
 
+def split_pool(n_engines: int, alpha) -> Tuple[int, int]:
+    """Bridge Algorithm 2's analytic instance ratio into runtime pool sizing:
+    split ``n_engines`` role-free engines into (n_prefill, n_decode) closest
+    to ``alpha`` = prefill:decode (a ``Fraction`` from ``rate_match`` or any
+    positive float), keeping at least one engine in each role.
+
+    This is what ``serving.policies.StaticSplitRateMatcher`` uses to turn a
+    ``RateMatchedPoint.alpha`` into an actual static deployment."""
+    assert n_engines >= 2, "need at least one engine per role"
+    a = float(alpha)
+    assert a > 0, alpha
+    # alpha = n_pre / n_dec  ->  n_pre = n * a / (1 + a), rounded to nearest
+    n_pre = int(round(n_engines * a / (1.0 + a)))
+    n_pre = min(max(n_pre, 1), n_engines - 1)
+    return n_pre, n_engines - n_pre
+
+
 def rate_match_fixed_ratio(prefill_pt: DesignPoint,
                            decode_pts: Sequence[DesignPoint], osl: int,
                            fixed_ratio: float) -> List[RateMatchedPoint]:

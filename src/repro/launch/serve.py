@@ -1,28 +1,47 @@
 """Disaggregated serving launcher.
 
-Runs a real (small) model through the executable serving runtime — prefill
-pool + decode pool + KV handoff + IFB + elastic rate matching — and prints
-SLA metrics. On a pod this is where the mesh + params_shardings would be
-installed (launch/dryrun.py proves those lower); on CPU we serve the smoke
-configs end-to-end.
+Runs a real (small) model through the policy-driven ``Cluster`` runtime —
+role-tagged engine pools + KV handoff + IFB + pluggable scheduler/router/
+rate-matcher — and prints SLA metrics. On a pod this is where the mesh +
+params_shardings would be installed (launch/dryrun.py proves those lower);
+on CPU we serve the smoke configs end-to-end.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
-      --prefill-engines 1 --decode-engines 2 --requests 16 --isl 64 --osl 16
+      --prefill-engines 1 --decode-engines 2 --requests 16 --isl 64 --osl 16 \
+      --scheduler fcfs --router least-loaded --rate-matcher elastic
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 import jax
 
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core.traffic import TrafficPattern
 from repro.models import transformer as T
-from repro.serving.disagg import ColocatedOrchestrator, DisaggOrchestrator
+from repro.serving.cluster import Cluster
 from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
 from repro.serving.engine import Engine
+from repro.serving.policies import (ChunkedPiggybackScheduler, ElasticPolicy,
+                                    FCFSScheduler, FirstFitRouter,
+                                    KVLocalityRouter, LeastLoadedRouter,
+                                    PrefixAffinityScheduler, PriorityScheduler,
+                                    RoundRobinRouter, StaticSplitRateMatcher)
 from repro.serving.request import TrafficGen
+
+SCHEDULERS = {
+    "fcfs": lambda chunk: FCFSScheduler(),
+    "priority": lambda chunk: PriorityScheduler(),
+    "prefix-affinity": lambda chunk: PrefixAffinityScheduler(chunk=chunk),
+}
+ROUTERS = {
+    "first-fit": FirstFitRouter,
+    "round-robin": RoundRobinRouter,
+    "least-loaded": LeastLoadedRouter,
+    "kv-locality": KVLocalityRouter,
+}
 
 
 def main(argv=None):
@@ -30,6 +49,14 @@ def main(argv=None):
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b",
                     help="architecture family (smoke-sized for CPU)")
     ap.add_argument("--mode", choices=["disagg", "coloc"], default="disagg")
+    ap.add_argument("--scheduler", choices=sorted(SCHEDULERS), default="fcfs")
+    ap.add_argument("--router", choices=sorted(ROUTERS),
+                    default=None, help="default: round-robin (disagg) / "
+                    "kv-locality (coloc)")
+    ap.add_argument("--rate-matcher", choices=["none", "elastic", "static"],
+                    default="elastic")
+    ap.add_argument("--static-alpha", type=float, default=0.5,
+                    help="prefill:decode ratio for --rate-matcher static")
     ap.add_argument("--prefill-engines", type=int, default=1)
     ap.add_argument("--decode-engines", type=int, default=2)
     ap.add_argument("--slots", type=int, default=4)
@@ -44,35 +71,68 @@ def main(argv=None):
     cfg = get_smoke_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
     capacity = args.isl + args.osl + 8
+    if args.scheduler == "prefix-affinity" and args.piggyback_chunk <= 0:
+        ap.error("--scheduler prefix-affinity needs --piggyback-chunk > 0 "
+                 "(engines must be built with a PrefixCache)")
+    # one chunk value feeds both the engines' PrefixCache and the scheduler
+    chunk = (args.piggyback_chunk
+             if args.scheduler == "prefix-affinity" else 0)
 
     def mk(i):
-        return Engine(i, cfg, params, slots=args.slots, capacity=capacity)
+        return Engine(i, cfg, params, slots=args.slots, capacity=capacity,
+                      chunk_size=chunk)
 
     gen = TrafficGen(vocab=cfg.vocab_size, rate=args.rate,
                      pattern=TrafficPattern("cli", args.isl, args.osl),
                      seed=args.seed)
     reqs = gen.generate(3600.0, max_requests=args.requests)
 
+    scheduler = SCHEDULERS[args.scheduler](chunk)
+    sched_name = args.scheduler
+    rate_matcher = {
+        "none": lambda: None,
+        "elastic": lambda: ElasticPolicy(
+            ElasticRateMatcher(ElasticConfig())),
+        "static": lambda: StaticSplitRateMatcher(args.static_alpha),
+    }[args.rate_matcher]()
+
     if args.mode == "disagg":
-        orch = DisaggOrchestrator(
-            [mk(i) for i in range(args.prefill_engines)],
-            [mk(100 + i) for i in range(args.decode_engines)],
-            elastic=ElasticRateMatcher(ElasticConfig()))
-        metrics = orch.run(reqs)
-        extra = {"transfers": orch.stats.transfers,
-                 "transferred_MB": orch.stats.transferred_bytes / 2**20,
-                 "prefill_pool": len(orch.prefill_pool),
-                 "decode_pool": len(orch.decode_pool),
-                 "elastic_moves": orch.elastic.moves}
+        router = ROUTERS[args.router or "round-robin"]()
+        cluster = Cluster(
+            {"prefill": [mk(i) for i in range(args.prefill_engines)],
+             "decode": [mk(100 + i) for i in range(args.decode_engines)]},
+            scheduler=scheduler, router=router, rate_matcher=rate_matcher)
+        metrics = cluster.run(reqs)
+        extra = {"transfers": cluster.stats.transfers,
+                 "transferred_MB": cluster.stats.transferred_bytes / 2**20,
+                 "prefill_pool": len(cluster.prefill_pool),
+                 "decode_pool": len(cluster.decode_pool)}
+        if rate_matcher is not None:
+            extra["rate_matcher_moves"] = rate_matcher.moves
+        router_name = args.router or "round-robin"
+        rm_name = args.rate_matcher
     else:
-        orch = ColocatedOrchestrator(
-            [mk(i) for i in range(args.prefill_engines
-                                  + args.decode_engines)],
-            piggyback_chunk=args.piggyback_chunk)
-        metrics = orch.run(reqs)
-        extra = {}
+        if args.scheduler == "fcfs" and args.piggyback_chunk:
+            scheduler = ChunkedPiggybackScheduler(args.piggyback_chunk)
+            sched_name = f"chunked-piggyback:{args.piggyback_chunk}"
+        if args.rate_matcher != "none":
+            print(f"note: --rate-matcher {args.rate_matcher} ignored in "
+                  "coloc mode (a single mixed pool has no split to size)",
+                  file=sys.stderr)
+        router_name = args.router or "kv-locality"
+        rm_name = "none"
+        router = ROUTERS[router_name]()
+        cluster = Cluster(
+            {"mixed": [mk(i) for i in range(args.prefill_engines
+                                            + args.decode_engines)]},
+            scheduler=scheduler, router=router, rate_matcher=None)
+        metrics = cluster.run(reqs)
+        extra = {"transfers": cluster.stats.transfers}
 
     print(json.dumps({"arch": cfg.name, "mode": args.mode,
+                      "scheduler": sched_name,
+                      "router": router_name,
+                      "rate_matcher": rm_name,
                       **{k: round(v, 4) for k, v in metrics.items()},
                       **extra}, indent=1, default=str))
     assert metrics["completed"] == args.requests

@@ -1,0 +1,237 @@
+"""Policy-driven serving runtime: one event loop, role-tagged engine pools.
+
+``Cluster`` owns pools of ``Engine``s tagged by role — ``"prefill"``,
+``"decode"``, or ``"mixed"`` (dual-role, the co-located deployment) — and
+drives them with a single virtual-time event loop over real jit'd compute:
+engine step wall times advance the cluster clock, so FTL/TTL/throughput
+metrics reflect actual computation (scaled by straggler-injection factors
+where tests use them).
+
+Every scheduling decision is delegated to three pluggable seams
+(``serving/policies.py``):
+
+  1. admission + batch formation  -> ``SchedulerPolicy``
+  2. prefill->decode placement    -> ``Router``
+  3. pool sizing over time        -> ``RateMatcher``
+
+The paper's two deployment archetypes are configurations, not code paths:
+
+  disagg    = Cluster({"prefill": [...], "decode": [...]}, ...)   (Fig 2 right)
+  colocated = Cluster({"mixed": [...]},
+                      scheduler=ChunkedPiggybackScheduler(...),
+                      router=KVLocalityRouter())                  (Fig 2 left)
+
+Fault tolerance is uniform: a dead engine raises ``EngineFailure``; the
+cluster re-queues its in-flight requests (``Request.reset_for_requeue``) and
+continues on the surviving pool, notifying the rate matcher for failover.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.engine import Engine, EngineFailure
+from repro.serving.request import Request, sla_metrics
+
+PREFILL, DECODE, MIXED = "prefill", "decode", "mixed"
+
+
+@dataclasses.dataclass
+class PoolStats:
+    prefill_busy_s: float = 0.0
+    decode_busy_s: float = 0.0
+    transfers: int = 0
+    transferred_bytes: int = 0
+    requeued: int = 0
+    engine_failures: int = 0
+    drained_stragglers: int = 0
+
+
+def kv_bytes(cache) -> int:
+    """Size of one request's KV/state handoff payload (the Eq 1-2 hop)."""
+    return sum(int(np.prod(v.shape)) * v.dtype.itemsize
+               for k, v in cache.items() if k != "pos")
+
+
+class Cluster:
+    """Role-tagged engine pools driven by one virtual-time event loop."""
+
+    def __init__(self, pools: Dict[str, List[Engine]], *,
+                 scheduler=None, router=None, rate_matcher=None):
+        from repro.serving.policies import FCFSScheduler, RoundRobinRouter
+        assert pools and all(r in (PREFILL, DECODE, MIXED) for r in pools), \
+            f"roles must be {PREFILL}/{DECODE}/{MIXED}: {list(pools)}"
+        self.pools: Dict[str, List[Engine]] = {
+            role: list(engines) for role, engines in pools.items()}
+        self.pools.setdefault(PREFILL, [])
+        self.pools.setdefault(DECODE, [])
+        self.scheduler = scheduler or FCFSScheduler()
+        self.router = router or RoundRobinRouter()
+        self.rate_matcher = rate_matcher
+        self.queue: List[Request] = []
+        self.pending_insert: List[Tuple[Request, int, Any,
+                                        Optional[Engine]]] = []
+        self.stats = PoolStats()
+        self.now = 0.0
+
+    # -- pool views (also the legacy orchestrator attribute surface) -------
+
+    @property
+    def prefill_pool(self) -> List[Engine]:
+        return self.pools[PREFILL]
+
+    @property
+    def decode_pool(self) -> List[Engine]:
+        return self.pools[DECODE]
+
+    @property
+    def mixed_pool(self) -> List[Engine]:
+        return self.pools.setdefault(MIXED, [])
+
+    def prefill_capable(self) -> List[Engine]:
+        return self.pools[PREFILL] + self.pools.get(MIXED, [])
+
+    def decode_capable(self) -> List[Engine]:
+        return self.pools[DECODE] + self.pools.get(MIXED, [])
+
+    def engines(self) -> List[Engine]:
+        return [e for pool in self.pools.values() for e in pool]
+
+    def ready_requests(self) -> List[Request]:
+        """Queued requests that have arrived, in queue order (requeued
+        requests sit at the front)."""
+        return [r for r in self.queue if r.arrival_t <= self.now]
+
+    # -- mutation hooks shared with RateMatcher policies --------------------
+
+    def requeue_inflight(self, eng: Engine):
+        """Re-queue (at the front) everything in flight on an engine and
+        release its slots — the one requeue path for failures, migrations,
+        and straggler drains."""
+        for slot, req in list(eng.slot_req.items()):
+            req.reset_for_requeue()
+            self.queue.insert(0, req)
+            self.stats.requeued += 1
+            eng.evict(slot)
+
+    def migrate(self, eng: Engine, src: List[Engine], dst: List[Engine]):
+        """Move a role-free engine between pools, re-queueing its in-flight
+        requests (cache resets on role change)."""
+        self.requeue_inflight(eng)
+        src.remove(eng)
+        dst.append(eng)
+
+    def _fail_engine(self, eng: Engine):
+        """Re-queue everything in flight on a dead engine."""
+        self.stats.engine_failures += 1
+        self.requeue_inflight(eng)
+        if self.rate_matcher is not None:
+            self.rate_matcher.on_failure(self, eng)
+
+    # -- event loop ---------------------------------------------------------
+
+    def run(self, requests: List[Request], *, max_wall_s: float = 1e9
+            ) -> Dict[str, float]:
+        # an empty capability would spin the virtual clock to max_wall_s
+        if not self.prefill_capable():
+            raise ValueError("cluster has no prefill-capable engines "
+                             "(prefill or mixed pool)")
+        if not self.decode_capable():
+            raise ValueError("cluster has no decode-capable engines "
+                             "(decode or mixed pool)")
+        self.queue = sorted(requests, key=lambda r: r.arrival_t)
+        prepare = getattr(self.rate_matcher, "prepare", None)
+        if prepare is not None:
+            prepare(self)       # e.g. apply a static split before round 1
+        inflight = True
+        while inflight:
+            inflight = self._step()
+            if self.now > max_wall_s:
+                break
+            if self.rate_matcher is not None:
+                self.rate_matcher.step(self)
+        return sla_metrics(requests)
+
+    def _step(self) -> bool:
+        """One scheduling round. Returns False when everything is drained."""
+        progressed = False
+
+        # 1) admission + prefill: the scheduler picks per prefill-capable
+        #    engine; mixed engines also need a local decode slot to admit.
+        for eng in [e for e in self.prefill_capable() if e.healthy]:
+            if eng in self.pools.get(MIXED, ()) and not eng.has_free_slot():
+                continue
+            req = self.scheduler.select(self, eng)
+            if req is None:
+                continue
+            self.queue.remove(req)
+            req.prefill_start_t = max(self.now, req.arrival_t)
+            n0 = len(eng.step_times)
+            try:
+                tok, cache = self.scheduler.run_prefill(self, eng, req)
+            except EngineFailure:
+                self.queue.insert(0, req)
+                self._fail_engine(eng)
+                continue
+            # step_times[n0] is the prefill tick itself; piggybacked decode
+            # rounds (which advance the clock on their own) append after it.
+            dt = eng.step_times[n0]
+            self.now += dt
+            self.stats.prefill_busy_s += dt
+            req.first_token_t = self.now
+            req.output.append(tok)
+            self.pending_insert.append((req, tok, cache, eng))
+            progressed = True
+
+        # 2) placement: the router assigns each pending KV cache to a decode
+        #    slot (the disaggregation hop when it crosses engines).
+        still = []
+        for req, tok, cache, src in self.pending_insert:
+            target = self.router.route(self, req, src)
+            if target is None:
+                still.append((req, tok, cache, src))
+                continue
+            target.insert(req, cache)
+            req._next_tok = tok
+            if target is not src:
+                self.stats.transfers += 1
+                self.stats.transferred_bytes += kv_bytes(cache)
+            progressed = True
+        self.pending_insert = still
+
+        # 3) decode: every decode-capable engine advances one token per slot
+        for eng in [e for e in self.decode_capable() if e.healthy]:
+            progressed |= self.decode_round(eng)
+
+        if not progressed and (self.queue or self.pending_insert):
+            # stuck waiting on arrivals or capacity: advance virtual time
+            future = [r.arrival_t for r in self.queue
+                      if r.arrival_t > self.now]
+            self.now = min(future) if future else self.now + 1e-3
+            return True
+        return progressed or bool(self.queue or self.pending_insert)
+
+    def decode_round(self, eng: Engine) -> bool:
+        """One decode step on one engine (public: piggyback policies
+        interleave this between prefill chunks)."""
+        if not eng.healthy or not eng.slot_req:
+            return False
+        toks = {s: r._next_tok for s, r in eng.slot_req.items()}
+        try:
+            nxt = eng.decode_step(toks)
+        except EngineFailure:
+            self._fail_engine(eng)
+            return True
+        self.now += eng.step_times[-1]
+        self.stats.decode_busy_s += eng.step_times[-1]
+        for slot, tok in nxt.items():
+            req = eng.slot_req[slot]
+            req.output.append(tok)
+            req.token_times.append(self.now)
+            req._next_tok = tok
+            if req.done:
+                req.done_t = self.now
+                eng.evict(slot)
+        return True

@@ -1,228 +1,71 @@
-"""Disaggregated + co-located serving orchestrators (executable).
+"""DEPRECATED shims: the legacy orchestrators as ``Cluster`` configurations.
 
-``DisaggOrchestrator`` drives separate prefill and decode pools with KV
-handoff between them (the paper's Fig 2 right). ``ColocatedOrchestrator``
-drives a single pool where prefills interleave with decode steps — either
-whole-prompt (non-piggybacked, decode stalls for the full prefill) or chunked
-(Sarathi-style, stalls bounded by the chunk) — Fig 2 left.
+The serving runtime now lives in ``serving/cluster.py`` (one event loop,
+role-tagged pools) with policy seams in ``serving/policies.py``. The two
+orchestrators this module used to implement as near-duplicate loops are just
+policy choices:
 
-Both run a virtual-time event loop over real jit'd compute: engine step wall
-times advance each engine's clock, so FTL/TTL/throughput metrics reflect the
-actual computation (scaled by the straggler-injection factor where tests use
-it). Fault tolerance: a dead engine raises EngineFailure; the orchestrator
-re-queues its in-flight requests and continues on the surviving pool
-(test_serving.py exercises kill + drain + re-balance).
+  ``DisaggOrchestrator(pre, dec)``   == Cluster({"prefill": pre,
+                                                "decode": dec})
+  ``ColocatedOrchestrator(pool)``    == Cluster({"mixed": pool},
+                                                scheduler=FCFS or
+                                                  ChunkedPiggybackScheduler,
+                                                router=KVLocalityRouter())
+
+Both shims keep the exact public surface (``.prefill_pool`` / ``.decode_pool``
+/ ``.pool`` / ``.stats`` / ``.elastic`` / ``run()``) so existing examples and
+tests run unchanged; new code should build ``Cluster`` directly and pick
+policies explicitly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+import warnings
+from typing import List
 
-import numpy as np
-
-from repro.serving.engine import Engine, EngineFailure
-from repro.serving.request import Request, sla_metrics
-
-
-@dataclasses.dataclass
-class PoolStats:
-    prefill_busy_s: float = 0.0
-    decode_busy_s: float = 0.0
-    transfers: int = 0
-    transferred_bytes: int = 0
-    requeued: int = 0
-    engine_failures: int = 0
-    drained_stragglers: int = 0
+from repro.serving.cluster import Cluster, PoolStats  # noqa: F401 (re-export)
+from repro.serving.engine import Engine
+from repro.serving.policies import (ChunkedPiggybackScheduler, ElasticPolicy,
+                                    FCFSScheduler, FirstFitRouter,
+                                    KVLocalityRouter)
 
 
-class DisaggOrchestrator:
-    """Prefill pool + decode pool + KV handoff + dynamic rate matching."""
+def _deprecated(old: str):
+    warnings.warn(
+        f"{old} is a deprecated shim over serving.cluster.Cluster; "
+        "build a Cluster with explicit policies instead",
+        DeprecationWarning, stacklevel=3)
+
+
+class DisaggOrchestrator(Cluster):
+    """Prefill pool + decode pool + KV handoff (+ optional elastic rate
+    matching), expressed as an FCFS/first-fit ``Cluster`` (first-fit is the
+    legacy placement, so multi-engine decode pools batch identically)."""
 
     def __init__(self, prefill_pool: List[Engine], decode_pool: List[Engine],
                  *, elastic=None):
-        self.prefill_pool = prefill_pool
-        self.decode_pool = decode_pool
+        _deprecated("DisaggOrchestrator")
+        super().__init__(
+            {"prefill": prefill_pool, "decode": decode_pool},
+            scheduler=FCFSScheduler(),
+            router=FirstFitRouter(),
+            rate_matcher=(ElasticPolicy(elastic)
+                          if elastic is not None else None))
         self.elastic = elastic
-        self.queue: List[Request] = []
-        self.pending_insert: List = []     # (req, cache) awaiting decode slot
-        self.stats = PoolStats()
-        self.now = 0.0
-
-    # -- helpers --------------------------------------------------------
-
-    def _alive(self, pool: List[Engine]) -> List[Engine]:
-        return [e for e in pool if e.healthy]
-
-    def _fail_engine(self, eng: Engine):
-        """Re-queue everything in flight on a dead engine."""
-        self.stats.engine_failures += 1
-        for slot, req in list(eng.slot_req.items()):
-            req.slot = None
-            req.engine_id = None
-            req.output.clear()
-            req.first_token_t = None
-            req.token_times.clear()
-            self.queue.insert(0, req)
-            self.stats.requeued += 1
-        eng.slot_req.clear()
-        if self.elastic is not None:
-            self.elastic.on_failure(self, eng)
-
-    def _kv_bytes(self, eng: Engine, cache) -> int:
-        return sum(int(np.prod(v.shape)) * v.dtype.itemsize
-                   for k, v in cache.items() if k != "pos")
-
-    # -- event loop -----------------------------------------------------
-
-    def run(self, requests: List[Request], *, max_wall_s: float = 1e9
-            ) -> Dict[str, float]:
-        self.queue = sorted(requests, key=lambda r: r.arrival_t)
-        inflight = True
-        while inflight:
-            inflight = self._step()
-            if self.now > max_wall_s:
-                break
-            if self.elastic is not None:
-                self.elastic.maybe_rebalance(self)
-        return sla_metrics(requests)
-
-    def _step(self) -> bool:
-        """One scheduling round. Returns False when everything is drained."""
-        progressed = False
-        # 1) prefill: each alive prefill engine takes the oldest queued req
-        for eng in self._alive(self.prefill_pool):
-            ready = [r for r in self.queue if r.arrival_t <= self.now]
-            if not ready:
-                break
-            req = ready[0]
-            self.queue.remove(req)
-            req.prefill_start_t = max(self.now, req.arrival_t)
-            try:
-                tok, cache = eng.prefill(req.prompt)
-            except EngineFailure:
-                self.queue.insert(0, req)
-                self._fail_engine(eng)
-                continue
-            self.stats.prefill_busy_s += eng.step_times[-1]
-            self.now += eng.step_times[-1]
-            req.first_token_t = self.now
-            req.output.append(tok)
-            self.pending_insert.append((req, tok, cache))
-            self.stats.transfers += 1
-            self.stats.transferred_bytes += self._kv_bytes(eng, cache)
-            progressed = True
-
-        # 2) KV handoff into decode slots (the disaggregation hop)
-        still = []
-        for req, tok, cache in self.pending_insert:
-            target = None
-            for eng in self._alive(self.decode_pool):
-                if eng.has_free_slot():
-                    target = eng
-                    break
-            if target is None:
-                still.append((req, tok, cache))
-                continue
-            target.insert(req, cache)
-            req._next_tok = tok
-            progressed = True
-        self.pending_insert = still
-
-        # 3) decode: every alive decode engine advances one token
-        for eng in self._alive(self.decode_pool):
-            if not eng.slot_req:
-                continue
-            toks = {s: r._next_tok for s, r in eng.slot_req.items()}
-            try:
-                nxt = eng.decode_step(toks)
-            except EngineFailure:
-                self._fail_engine(eng)
-                continue
-            self.now += eng.step_times[-1]
-            self.stats.decode_busy_s += eng.step_times[-1]
-            for slot, tok in nxt.items():
-                req = eng.slot_req[slot]
-                req.output.append(tok)
-                req.token_times.append(self.now)
-                req._next_tok = tok
-                if req.done:
-                    req.done_t = self.now
-                    eng.evict(slot)
-            progressed = True
-
-        if not progressed and (self.queue or self.pending_insert):
-            # stuck waiting on arrivals or capacity: advance virtual time
-            future = [r.arrival_t for r in self.queue
-                      if r.arrival_t > self.now]
-            self.now = min(future) if future else self.now + 1e-3
-            return True
-        return progressed or bool(self.queue or self.pending_insert)
 
 
-class ColocatedOrchestrator:
-    """Single pool; prefills preempt decode (optionally chunked)."""
+class ColocatedOrchestrator(Cluster):
+    """Single dual-role pool; prefills preempt decode (optionally chunked
+    with piggybacked decode), expressed as a mixed-pool ``Cluster``."""
 
     def __init__(self, pool: List[Engine], *, piggyback_chunk: int = 0):
-        self.pool = pool
+        _deprecated("ColocatedOrchestrator")
+        super().__init__(
+            {"mixed": pool},
+            scheduler=(ChunkedPiggybackScheduler(piggyback_chunk)
+                       if piggyback_chunk else FCFSScheduler()),
+            router=KVLocalityRouter())
         self.piggyback_chunk = piggyback_chunk
-        self.queue: List[Request] = []
-        self.now = 0.0
-        self.stats = PoolStats()
 
-    def run(self, requests: List[Request], *, max_wall_s: float = 1e9
-            ) -> Dict[str, float]:
-        self.queue = sorted(requests, key=lambda r: r.arrival_t)
-        while True:
-            progressed = self._step()
-            if not progressed or self.now > max_wall_s:
-                break
-        return sla_metrics(requests)
-
-    def _step(self) -> bool:
-        progressed = False
-        for eng in [e for e in self.pool if e.healthy]:
-            # admit one request if a slot is free (prefill stalls decode)
-            ready = [r for r in self.queue if r.arrival_t <= self.now]
-            if ready and eng.has_free_slot():
-                req = ready[0]
-                self.queue.remove(req)
-                req.prefill_start_t = max(self.now, req.arrival_t)
-                if self.piggyback_chunk:
-                    def _interleave(i, n):
-                        self._decode_round(eng)
-                    tok, cache = eng.prefill_chunked(
-                        req.prompt, self.piggyback_chunk,
-                        on_chunk=_interleave)
-                else:
-                    tok, cache = eng.prefill(req.prompt)
-                self.now += eng.step_times[-1]
-                self.stats.prefill_busy_s += eng.step_times[-1]
-                req.first_token_t = self.now
-                req.output.append(tok)
-                eng.insert(req, cache)
-                req._next_tok = tok
-                progressed = True
-            progressed |= self._decode_round(eng)
-
-        if not progressed and self.queue:
-            future = [r.arrival_t for r in self.queue if r.arrival_t > self.now]
-            self.now = min(future) if future else self.now + 1e-3
-            return True
-        return progressed or bool(self.queue)
-
-    def _decode_round(self, eng: Engine) -> bool:
-        if not eng.slot_req:
-            return False
-        toks = {s: r._next_tok for s, r in eng.slot_req.items()}
-        nxt = eng.decode_step(toks)
-        self.now += eng.step_times[-1]
-        self.stats.decode_busy_s += eng.step_times[-1]
-        for slot, tok in nxt.items():
-            req = eng.slot_req[slot]
-            req.output.append(tok)
-            req.token_times.append(self.now)
-            req._next_tok = tok
-            if req.done:
-                req.done_t = self.now
-                eng.evict(slot)
-        return True
+    @property
+    def pool(self) -> List[Engine]:
+        return self.pools["mixed"]

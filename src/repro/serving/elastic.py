@@ -2,9 +2,10 @@
 
 The paper's Fig 9-10 finding: the optimal ctx:gen chip ratio moves with
 traffic and latency targets, so a fixed split loses Pareto area. The
-``ElasticRateMatcher`` watches queue depth vs decode occupancy and migrates
-engines between pools at runtime (an engine is role-free: moving it is a
-list operation + cache reset). It also:
+``ElasticRateMatcher`` watches queue depth vs decode occupancy on a
+``cluster.Cluster`` (driven through the ``policies.ElasticPolicy`` adapter)
+and migrates engines between pools at runtime (an engine is role-free:
+moving it is a list operation + cache reset). It also:
 
   - replaces failed engines' capacity by re-balancing the survivors,
   - drains stragglers: engines whose step-time EWMA exceeds
@@ -74,17 +75,7 @@ class ElasticRateMatcher:
         if not cands:
             return
         eng = min(cands, key=lambda e: e.active)
-        for slot, req in list(eng.slot_req.items()):
-            req.slot = None
-            req.engine_id = None
-            req.output.clear()
-            req.first_token_t = None
-            req.token_times.clear()
-            orch.queue.insert(0, req)
-            orch.stats.requeued += 1
-            eng.evict(slot)
-        src.remove(eng)
-        dst.append(eng)
+        orch.migrate(eng, src, dst)
         self.moves.append(f"{eng.engine_id}:{why}")
 
     def _drain_stragglers(self, orch):
@@ -97,14 +88,7 @@ class ElasticRateMatcher:
             ref = min(e.mean_step_s for e in healthy)
             for e in healthy:
                 if ref > 0 and e.mean_step_s > self.cfg.straggler_factor * ref:
-                    for slot, req in list(e.slot_req.items()):
-                        req.slot = None
-                        req.output.clear()
-                        req.first_token_t = None
-                        req.token_times.clear()
-                        orch.queue.insert(0, req)
-                        orch.stats.requeued += 1
-                        e.evict(slot)
+                    orch.requeue_inflight(e)
                     pool.remove(e)
                     orch.stats.drained_stragglers += 1
                     self.moves.append(f"{e.engine_id}:straggler")

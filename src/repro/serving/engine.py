@@ -41,18 +41,17 @@ class PrefixCache:
         self.chunk = chunk
         self.max_entries = max_entries
         self._entries = []          # [(tokens_tuple, cache)], LRU order
+        self.version = 0            # bumped per insert (probe memo key)
         self.hits = 0
         self.hit_tokens = 0
         self.misses = 0
 
-    def lookup(self, prompt: np.ndarray):
-        """Longest chunk-aligned *common* prefix with any cached entry ->
-        (cache, length) or (None, 0). Positions beyond the common prefix in
-        the reused cache are overwritten by the resumed chunked prefill and
-        causally masked meanwhile, so partial reuse is exact."""
-        best, best_len = None, 0
+    def _best_match(self, prompt: np.ndarray):
+        """(entry_index, usable_prefix_len) of the longest chunk-aligned
+        *common* prefix with any cached entry, or (-1, 0)."""
+        best, best_len = -1, 0
         pt = np.asarray(prompt)
-        for toks, cache in self._entries:
+        for idx, (toks, _cache) in enumerate(self._entries):
             k = np.asarray(toks)
             m = min(len(k), len(pt))
             neq = np.nonzero(k[:m] != pt[:m])[0]
@@ -62,13 +61,26 @@ class PrefixCache:
             if common >= len(pt):
                 common = len(pt) - self.chunk
             if common > best_len:
-                best, best_len = cache, common
-        if best is None or best_len <= 0:
+                best, best_len = idx, common
+        return best, best_len
+
+    def match_len(self, prompt: np.ndarray) -> int:
+        """Usable cached-prefix length without touching hit/miss stats
+        (scheduler affinity probes)."""
+        return self._best_match(prompt)[1]
+
+    def lookup(self, prompt: np.ndarray):
+        """Longest chunk-aligned common prefix with any cached entry ->
+        (cache, length) or (None, 0). Positions beyond the common prefix in
+        the reused cache are overwritten by the resumed chunked prefill and
+        causally masked meanwhile, so partial reuse is exact."""
+        idx, best_len = self._best_match(prompt)
+        if idx < 0 or best_len <= 0:
             self.misses += 1
             return None, 0
         self.hits += 1
         self.hit_tokens += best_len
-        return best, best_len
+        return self._entries[idx][1], best_len
 
     def insert(self, prompt: np.ndarray, cache):
         n = (len(prompt) // self.chunk) * self.chunk
@@ -79,6 +91,7 @@ class PrefixCache:
         self._entries.append((key, cache))
         if len(self._entries) > self.max_entries:
             self._entries.pop(0)
+        self.version += 1
 
 
 class Engine:
@@ -100,6 +113,10 @@ class Engine:
 
         self._prefill = jax.jit(
             lambda p, i: T.prefill_full(p, cfg, i, capacity=capacity))
+        # jitted chunked-prefill wrappers, keyed (chunk, has_base_cache):
+        # building a fresh jax.jit per call would discard jit's trace cache
+        # and recompile on every request.
+        self._chunked_fns: Dict[Tuple[int, bool], Any] = {}
         self.prefix_cache = (PrefixCache(chunk_size) if chunk_size
                              and cfg.block == "attn" else None)
         self._decode = jax.jit(lambda p, c, t: T.decode_step(p, cfg, c, t))
@@ -154,13 +171,11 @@ class Engine:
             base_cache, start = self.prefix_cache.lookup(prompt)
         t0 = time.perf_counter()
         inputs = {"tokens": jnp.asarray(toks)[None, :]}
-        logits, cache = jax.jit(
-            lambda p, i, c: T.prefill_chunked(
-                p, self.cfg, i, chunk, capacity=self.capacity,
-                cache=c, start=start),
-            static_argnames=()) (
-            self.params, inputs, base_cache) if base_cache is not None else             jax.jit(lambda p, i: T.prefill_chunked(
-                p, self.cfg, i, chunk, capacity=self.capacity))(
+        if base_cache is not None:
+            logits, cache = self._chunked_fn(chunk, True)(
+                self.params, inputs, base_cache, start=start)
+        else:
+            logits, cache = self._chunked_fn(chunk, False)(
                 self.params, inputs)
         tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
         self._tick(t0)
@@ -171,6 +186,24 @@ class Engine:
             for i in range((S - start + pad) // chunk):
                 on_chunk(i, max((S - start + pad) // chunk, 1))
         return tok, cache
+
+    def _chunked_fn(self, chunk: int, has_base: bool):
+        """Cached jitted chunked-prefill callable. ``start`` stays a static
+        argname (it drives the Python chunk loop), so jit's own trace cache
+        keys on (start, shapes) and repeated prompts hit compiled code."""
+        fn = self._chunked_fns.get((chunk, has_base))
+        if fn is None:
+            if has_base:
+                fn = jax.jit(
+                    lambda p, i, c, start: T.prefill_chunked(
+                        p, self.cfg, i, chunk, capacity=self.capacity,
+                        cache=c, start=start),
+                    static_argnames=("start",))
+            else:
+                fn = jax.jit(lambda p, i: T.prefill_chunked(
+                    p, self.cfg, i, chunk, capacity=self.capacity))
+            self._chunked_fns[(chunk, has_base)] = fn
+        return fn
 
     # ---- decode role ----------------------------------------------------
 

@@ -16,6 +16,10 @@ class Request:
     prompt: np.ndarray              # int32 [isl]
     osl: int                        # tokens to generate
     arrival_t: float = 0.0
+    # scheduling class (consumed by SchedulerPolicy implementations)
+    priority: int = 0               # larger = more urgent
+    ftl_target_s: Optional[float] = None   # SLA: first-token latency target
+    ttl_target_s: Optional[float] = None   # SLA: median inter-token target
     # lifecycle timestamps (engine clock, seconds)
     prefill_start_t: Optional[float] = None
     first_token_t: Optional[float] = None
@@ -46,6 +50,37 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.output) >= self.osl
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        if self.prefill_start_t is None:
+            return None
+        return self.prefill_start_t - self.arrival_t
+
+    @property
+    def sla_met(self) -> bool:
+        """True when every *declared* target is met (no targets -> met)."""
+        if self.ftl_target_s is not None:
+            if self.ftl is None or self.ftl > self.ftl_target_s:
+                return False
+        if self.ttl_target_s is not None:
+            ts = self.ttls
+            if ts and float(np.median(ts)) > self.ttl_target_s:
+                return False
+        return True
+
+    def reset_for_requeue(self) -> None:
+        """Return the request to its pre-admission state so it can be
+        re-queued after an engine failure / migration / straggler drain.
+        Generation restarts from scratch (greedy decode is deterministic,
+        so the replay produces identical tokens)."""
+        self.slot = None
+        self.engine_id = None
+        self.prefill_start_t = None
+        self.first_token_t = None
+        self.prefill_progress = 0
+        self.output.clear()
+        self.token_times.clear()
 
 
 class TrafficGen:
@@ -90,14 +125,22 @@ def sla_metrics(requests: List[Request]) -> Dict[str, float]:
     done = [r for r in requests if r.done_t is not None]
     ftls = [r.ftl for r in done if r.ftl is not None]
     ttls = [t for r in done for t in r.ttls]
+    waits = [r.queue_wait_s for r in done if r.queue_wait_s is not None]
     total_tokens = sum(len(r.output) for r in done)
-    span = max((r.done_t for r in done), default=0.0) or 1e-9
+    # throughput spans first arrival -> last completion (arrivals need not
+    # start at t=0: drained traffic phases, warm restarts, ...)
+    t0 = min((r.arrival_t for r in done), default=0.0)
+    t1 = max((r.done_t for r in done), default=0.0)
+    span = max(t1 - t0, 1e-9)
     return {
         "completed": len(done),
         "p50_ftl_s": percentile(ftls, 50),
         "p99_ftl_s": percentile(ftls, 99),
         "p50_ttl_s": percentile(ttls, 50),
         "p99_ttl_s": percentile(ttls, 99),
+        "queue_wait_s": float(np.mean(waits)) if waits else 0.0,
+        "sla_attainment": (sum(r.sla_met for r in done) / len(done)
+                           if done else 0.0),
         "tokens_per_s": total_tokens / span,
         "tps_per_user": 1.0 / percentile(ttls, 50) if ttls else 0.0,
     }

@@ -4,7 +4,12 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; the rest of the "
+    "suite must still collect cleanly without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.pareto import frontier_at, pareto_frontier
 from repro.core.rate_matching import _round_fraction

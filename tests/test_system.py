@@ -16,8 +16,10 @@ from repro.core.paper_models import LLAMA31_70B
 from repro.core.traffic import DynamicTraffic, TrafficPattern
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serving.disagg import ColocatedOrchestrator, DisaggOrchestrator
+from repro.serving.cluster import Cluster
+from repro.serving.disagg import DisaggOrchestrator
 from repro.serving.engine import Engine
+from repro.serving.policies import KVLocalityRouter
 from repro.serving.request import TrafficGen
 
 CFG = ModelConfig(name="sys-tiny", family="dense", num_layers=2, d_model=64,
@@ -36,13 +38,12 @@ def test_disagg_reduces_decode_stall_under_prefill_heavy_load():
                        pattern=TrafficPattern("ph", 96, 6), seed=seed)
         return g.generate(10.0, max_requests=6)
 
-    co = ColocatedOrchestrator([Engine(0, CFG, params, slots=4,
-                                       capacity=128)])
+    co = Cluster({"mixed": [Engine(0, CFG, params, slots=4, capacity=128)]},
+                 router=KVLocalityRouter())
     m_co = co.run(reqs(0), max_wall_s=600)
 
-    dis = DisaggOrchestrator(
-        [Engine(1, CFG, params, slots=4, capacity=128)],
-        [Engine(2, CFG, params, slots=4, capacity=128)])
+    dis = Cluster({"prefill": [Engine(1, CFG, params, slots=4, capacity=128)],
+                   "decode": [Engine(2, CFG, params, slots=4, capacity=128)]})
     m_dis = dis.run(reqs(1), max_wall_s=600)
 
     assert m_co["completed"] == 6 and m_dis["completed"] == 6
