@@ -1,75 +1,130 @@
-"""Scheduler/router policy comparison on the executable Cluster runtime.
+"""Scheduler/router policy comparison across workloads on the executable
+Cluster runtime.
 
-Runs the same mixed traffic (long low-priority prefills + short urgent
-requests) through several policy configurations of the same engine fleet and
-prints one CSV row per configuration — the runtime analogue of the paper's
-point that policy, not pipeline, is the unit of experimentation:
+Runs each selected workload through several policy stacks on an identical
+engine fleet, prints one CSV row per (workload, policy) pair, and writes
+the full trajectory to ``BENCH_serving.json`` — the runtime analogue of
+the paper's point that policy, not pipeline, is the unit of
+experimentation, now with the *workload* as a first-class axis:
 
-  PYTHONPATH=src python benchmarks/serving_policies.py
+  PYTHONPATH=src python benchmarks/serving_policies.py \
+      --workload mixed-priority sessions burst --out BENCH_serving.json
 
-Columns: policy, completed, p50_ftl_s, p99_ftl_s, urgent_p99_ftl_s,
-p99_ttl_s, sla_attainment, queue_wait_s, transfers.
+Workloads: ``mixed-priority`` (batch backfill + interactive tier, open
+loop), ``sessions`` (closed-loop multi-turn shared-prefix conversations),
+``burst`` (prefill-heavy burst at t=0).
 """
+import argparse
+import json
 import sys
 
-import numpy as np
 
-
-def main() -> None:
+def main(argv=None) -> None:
     sys.path.insert(0, "src")
     import jax
+    import numpy as np
 
     from repro.models import transformer as T
     from repro.models.config import ModelConfig
     from repro.serving.cluster import Cluster
     from repro.serving.engine import Engine
-    from repro.serving.policies import (FCFSScheduler, LeastLoadedRouter,
+    from repro.serving.policies import (FCFSScheduler, KVLocalityRouter,
+                                        LeastLoadedRouter,
+                                        PrefixAffinityScheduler,
                                         PriorityScheduler, RoundRobinRouter)
-    from repro.serving.request import Request
+    from repro.workloads import (BATCH, INTERACTIVE, Burst, FixedShape,
+                                 OpenLoopWorkload, Recorder, SessionWorkload,
+                                 Superpose)
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", nargs="+", default=["mixed-priority"],
+                    choices=["mixed-priority", "sessions", "burst"],
+                    help="workload axis (one CSV section per workload)")
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="trajectory file (one record per workload x "
+                    "policy); '-' disables")
+    args = ap.parse_args(argv)
 
     cfg = ModelConfig(name="bench-tiny", family="dense", num_layers=2,
                       d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
                       vocab_size=97, remat=False, logits_chunk=32,
                       dtype="float32")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    CHUNK = 8
 
-    def traffic():
-        rng = np.random.default_rng(0)
-        reqs = [Request(rid=i,
-                        prompt=rng.integers(0, 97, 64).astype(np.int32),
-                        osl=6, priority=0)
-                for i in range(10)]
-        reqs += [Request(rid=100 + i,
-                         prompt=rng.integers(0, 97, 16).astype(np.int32),
-                         osl=6, priority=5, ftl_target_s=0.5)
-                 for i in range(4)]
-        return reqs
+    def workload(name):
+        """(fresh workload instance, expected completions)."""
+        if name == "mixed-priority":
+            bg = OpenLoopWorkload(Burst(10, at=0.0), FixedShape(64, 6),
+                                  vocab=97, seed=0, tier=BATCH)
+            urgent = OpenLoopWorkload(Burst(4, at=0.0), FixedShape(16, 6),
+                                      vocab=97, seed=1, start_rid=100,
+                                      tier=INTERACTIVE)
+            return Superpose([bg, urgent]), 14
+        if name == "sessions":
+            return SessionWorkload(vocab=97, seed=0, sessions=4, turns=3,
+                                   families=2, system_prefix_len=32,
+                                   user_isl=16, osl=6,
+                                   think_time=0.02), 12
+        if name == "burst":
+            return OpenLoopWorkload(Burst(12, at=0.0), FixedShape(96, 4),
+                                    vocab=97, seed=2), 12
+        raise ValueError(name)
 
     def fleet():
-        return ([Engine(i, cfg, params, slots=4, capacity=96)
-                 for i in range(1)],
-                [Engine(10 + i, cfg, params, slots=4, capacity=96)
-                 for i in range(2)])
+        pre = [Engine(i, cfg, params, slots=4, capacity=256,
+                      chunk_size=CHUNK) for i in range(1)]
+        dec = [Engine(10 + i, cfg, params, slots=4, capacity=256,
+                      chunk_size=CHUNK) for i in range(2)]
+        return pre, dec
 
     configs = [
         ("fcfs+round-robin", FCFSScheduler, RoundRobinRouter),
         ("fcfs+least-loaded", FCFSScheduler, LeastLoadedRouter),
         ("priority+least-loaded", PriorityScheduler, LeastLoadedRouter),
+        ("prefix-affinity+kv-locality",
+         lambda: PrefixAffinityScheduler(CHUNK), KVLocalityRouter),
     ]
-    print("policy,completed,p50_ftl_s,p99_ftl_s,urgent_p99_ftl_s,"
-          "p99_ttl_s,sla_attainment,queue_wait_s,transfers")
-    for name, sched, router in configs:
-        pre, dec = fleet()
-        cl = Cluster({"prefill": pre, "decode": dec},
-                     scheduler=sched(), router=router())
-        reqs = traffic()
-        m = cl.run(reqs, max_wall_s=600)
-        urgent = [r.ftl for r in reqs if r.priority > 0 and r.ftl is not None]
-        u99 = float(np.percentile(urgent, 99)) if urgent else float("nan")
-        print(f"{name},{m['completed']:.0f},{m['p50_ftl_s']:.4f},"
-              f"{m['p99_ftl_s']:.4f},{u99:.4f},{m['p99_ttl_s']:.4f},"
-              f"{m['sla_attainment']:.3f},{m['queue_wait_s']:.4f},"
-              f"{cl.stats.transfers}")
+    trajectory = []
+    print("workload,policy,completed,p50_ftl_s,p99_ftl_s,urgent_p99_ftl_s,"
+          "p99_ttl_s,sla_attainment,queue_wait_s,transfers,cache_hit_tokens")
+    for wname in args.workload:
+        for pname, sched, router in configs:
+            pre, dec = fleet()
+            cl = Cluster({"prefill": pre, "decode": dec},
+                         scheduler=sched(), router=router())
+            work, expected = workload(wname)
+            rec = Recorder(work)
+            m = cl.serve(rec, max_wall_s=600)
+            assert m["completed"] == expected, \
+                f"{wname}/{pname}: {m['completed']} != {expected}"
+            urgent = [r.ftl for r in rec.emitted
+                      if r.priority > 0 and r.ftl is not None]
+            u99 = float(np.percentile(urgent, 99)) if urgent else None
+            hits = sum(e.prefix_cache.hit_tokens for e in pre + dec
+                       if e.prefix_cache is not None)
+            row = {"workload": wname, "policy": pname,
+                   "completed": int(m["completed"]),
+                   "p50_ftl_s": m["p50_ftl_s"], "p99_ftl_s": m["p99_ftl_s"],
+                   "urgent_p99_ftl_s": u99, "p99_ttl_s": m["p99_ttl_s"],
+                   "sla_attainment": m["sla_attainment"],
+                   "queue_wait_s": m["queue_wait_s"],
+                   "tokens_per_s": m["tokens_per_s"],
+                   "transfers": cl.stats.transfers,
+                   "cache_hit_tokens": hits}
+            trajectory.append(row)
+            u99_csv = f"{u99:.4f}" if u99 is not None else "nan"
+            print(f"{wname},{pname},{row['completed']},"
+                  f"{row['p50_ftl_s']:.4f},{row['p99_ftl_s']:.4f},"
+                  f"{u99_csv},{row['p99_ttl_s']:.4f},"
+                  f"{row['sla_attainment']:.3f},{row['queue_wait_s']:.4f},"
+                  f"{row['transfers']},{hits}")
+    if args.out != "-":
+        with open(args.out, "w") as f:
+            # allow_nan=False keeps the artifact valid for strict parsers
+            # (missing percentiles are already None, not NaN)
+            json.dump(trajectory, f, indent=1, allow_nan=False)
+        print(f"# wrote {len(trajectory)} records -> {args.out}")
 
 
 if __name__ == "__main__":

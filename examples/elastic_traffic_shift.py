@@ -11,13 +11,12 @@ paper's Fig 10 baseline) to show what *not* adapting costs.
 import jax
 
 from repro.configs import get_smoke_config
-from repro.core.traffic import TrafficPattern
 from repro.models import transformer as T
 from repro.serving.cluster import Cluster
 from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
 from repro.serving.engine import Engine
 from repro.serving.policies import ElasticPolicy, StaticSplitRateMatcher
-from repro.serving.request import TrafficGen
+from repro.workloads import Burst, FixedShape, OpenLoopWorkload, Superpose
 
 cfg = get_smoke_config("qwen3-14b")
 params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -29,17 +28,15 @@ def engines(ids):
 
 
 def traffic():
-    # phase 1: prefill-heavy (long prompts, short outputs) -> ctx pool starved
-    gen1 = TrafficGen(vocab=cfg.vocab_size, rate=1e6,
-                      pattern=TrafficPattern("prefill-heavy", 96, 4), seed=1)
-    # phase 2: generation-heavy (short prompts, long outputs) -> gen starved
-    gen2 = TrafficGen(vocab=cfg.vocab_size, rate=1e6,
-                      pattern=TrafficPattern("gen-heavy", 16, 24), seed=2)
-    reqs1 = gen1.generate(60.0, max_requests=8)
-    reqs2 = gen2.generate(60.0, max_requests=8)
-    for r in reqs2:
-        r.arrival_t += 1e-3   # phase 2 arrives after phase 1
-    return reqs1 + reqs2
+    """The traffic flip as one workload object: a prefill-heavy burst at
+    t=0 superposed with a generation-heavy burst right behind it (the old
+    version faked this with two rate=1e6 TrafficGens and hand-edited
+    arrival_t offsets)."""
+    phase1 = OpenLoopWorkload(Burst(8, at=0.0), FixedShape(96, 4),
+                              vocab=cfg.vocab_size, seed=1)
+    phase2 = OpenLoopWorkload(Burst(8, at=1e-3), FixedShape(16, 24),
+                              vocab=cfg.vocab_size, seed=2, start_rid=100)
+    return Superpose([phase1, phase2])
 
 
 # --- dynamic: elastic rate matcher moves engines with the traffic ---------
@@ -48,7 +45,7 @@ elastic = ElasticPolicy(ElasticRateMatcher(ElasticConfig(
 orch = Cluster({"prefill": engines([0]), "decode": engines([10, 11, 12])},
                rate_matcher=elastic)
 ratio_before = len(orch.prefill_pool) / len(orch.decode_pool)
-metrics = orch.run(traffic())
+metrics = orch.serve(traffic())
 ratio_after = len(orch.prefill_pool) / max(len(orch.decode_pool), 1)
 
 print("dynamic :", {k: round(v, 4) for k, v in metrics.items()})
@@ -61,7 +58,7 @@ assert elastic.moves, "expected the rate matcher to migrate engines"
 # --- static: the same fleet pinned at the analytic 1:3 split --------------
 static = Cluster({"prefill": engines([20]), "decode": engines([30, 31, 32])},
                  rate_matcher=StaticSplitRateMatcher(1 / 3))
-m_static = static.run(traffic())
+m_static = static.serve(traffic())
 print("static  :", {k: round(v, 4) for k, v in m_static.items()})
 assert m_static["completed"] == 16
 assert not static.rate_matcher.moves[1:], "static split must not keep moving"

@@ -1,0 +1,99 @@
+"""Closed-loop multi-turn sessions: the first workload that actually
+rewards KV locality.
+
+A ``SessionWorkload`` emits conversations — turn N+1's prompt is the whole
+prior context plus a fresh user delta, and it *arrives only after turn N
+completes* (think time included). The same fleet serves it under two
+policy stacks:
+
+  affinity = PrefixAffinityScheduler + KVLocalityRouter  (keep each
+             conversation on the engine already holding its KV)
+  naive    = FCFSScheduler + RoundRobinRouter            (placement blind)
+
+Affinity wins on prefix-cache hit tokens (it re-prefills only the new
+delta) and, once jit caches are warm, on mean first-token latency (each
+stack first serves a warm-up episode with the same *shapes* but a
+different seed, so compiles never pollute the measured pass and prompt
+content never collides with it). The very same workload object then feeds
+the *analytic* sweep: ``workload_frontier`` consumes its
+``(isl, osl, reuse_fraction)`` marginals, so the paper-style frontier and
+the executable run describe one scenario.
+
+  PYTHONPATH=src python examples/multi_turn_sessions.py
+"""
+import jax
+import numpy as np
+
+from repro.core.frontiers import workload_frontier
+from repro.core.paper_models import LLAMA31_70B
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.cluster import Cluster
+from repro.serving.engine import Engine
+from repro.serving.policies import (FCFSScheduler, KVLocalityRouter,
+                                    PrefixAffinityScheduler, RoundRobinRouter)
+from repro.workloads import Recorder, SessionWorkload
+
+cfg = ModelConfig(name="chat-small", family="dense", num_layers=4,
+                  d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                  vocab_size=97, remat=False, logits_chunk=32,
+                  dtype="float32")
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+CHUNK, CAP = 16, 448
+
+
+def sessions(seed):
+    # 6 conversations, 3 turns each, two shared system prompts (families)
+    return SessionWorkload(vocab=cfg.vocab_size, seed=seed, sessions=6,
+                           turns=3, families=2, system_prefix_len=192,
+                           user_isl=48, osl=4, think_time=0.02)
+
+
+def serve(scheduler, router, base):
+    pool = [Engine(base, cfg, params, slots=8, capacity=CAP,
+                   chunk_size=CHUNK)]
+    cl = Cluster({"mixed": pool}, scheduler=scheduler, router=router)
+    cl.serve(sessions(42), max_wall_s=600)      # warm-up: same shapes,
+    h0 = sum(e.prefix_cache.hit_tokens for e in pool)   # different seed
+    rec = Recorder(sessions(0))
+    m = cl.serve(rec, max_wall_s=600)           # measured, steady-state
+    hits = sum(e.prefix_cache.hit_tokens for e in pool) - h0
+    mean_ftl = float(np.mean([r.ftl for r in rec.emitted]))
+    return m, hits, mean_ftl, cl
+
+
+m_aff, hits_aff, ftl_aff, cl_aff = serve(PrefixAffinityScheduler(CHUNK),
+                                         KVLocalityRouter(), 0)
+m_fcfs, hits_fcfs, ftl_fcfs, cl_fcfs = serve(FCFSScheduler(),
+                                             RoundRobinRouter(), 10)
+
+print("== 6 sessions x 3 turns, shared system prompts, think-time 20 ms ==")
+for name, m, hits, ftl, cl in [
+        ("affinity", m_aff, hits_aff, ftl_aff, cl_aff),
+        ("naive   ", m_fcfs, hits_fcfs, ftl_fcfs, cl_fcfs)]:
+    print(f"{name}: completed={m['completed']:.0f} "
+          f"mean_ftl={ftl*1e3:.1f}ms "
+          f"cache_hit_tokens={hits} transfers={cl.stats.transfers}")
+assert m_aff["completed"] == m_fcfs["completed"] == 18
+assert hits_aff > hits_fcfs, "affinity must reuse cached prefixes"
+assert ftl_aff < ftl_fcfs, "reuse must shorten time-to-first-token"
+print(f"-> affinity reused {hits_aff} prompt tokens "
+      f"(naive full-prefills everything: {hits_fcfs}) and cut mean FTL "
+      f"{ftl_fcfs/ftl_aff:.2f}x")
+
+# the same scenario object drives the analytic sweep: its reuse fraction
+# shifts the Pareto frontier (prefill compute shrinks, KV residency doesn't)
+summary = sessions(0).summary()
+f_reuse = workload_frontier(LLAMA31_70B, summary, max_chips=16)
+f_cold = workload_frontier(
+    LLAMA31_70B, type(summary)(isl=summary.isl, osl=summary.osl,
+                               rate=summary.rate, reuse_fraction=0.0),
+    max_chips=16)
+best_reuse = max(t for _, t in f_reuse)
+best_cold = max(t for _, t in f_cold)
+print(f"analytic marginals: isl={summary.isl:.0f} osl={summary.osl:.0f} "
+      f"reuse={summary.reuse_fraction:.2f}")
+print(f"frontier peak tok/s/chip: {best_reuse:.1f} with reuse "
+      f"vs {best_cold:.1f} cold -> {best_reuse/best_cold:.2f}x")
+assert best_reuse >= best_cold
+print("multi_turn_sessions OK — closed-loop workload served and swept")

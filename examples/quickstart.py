@@ -3,39 +3,46 @@ disaggregated — the whole substrate in ~40 lines of user code.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import shutil
+import tempfile
+
 import jax
 
 from repro.configs import get_smoke_config
-from repro.core.traffic import TrafficPattern
 from repro.data.pipeline import make_pipeline
-from repro.serving.disagg import DisaggOrchestrator
+from repro.serving.cluster import Cluster
 from repro.serving.engine import Engine
-from repro.serving.request import TrafficGen
 from repro.train.trainer import Trainer
+from repro.workloads import FixedShape, OpenLoopWorkload, Poisson
 
 # 1. pick an assigned architecture (smoke-sized for CPU)
 cfg = get_smoke_config("granite-moe-1b-a400m")
 print(f"model: {cfg.name}  params={cfg.param_count():,}")
 
-# 2. train it for a few steps (fault-tolerant loop, checkpoints included)
-data = make_pipeline(cfg, seq_len=48, global_batch=4)
-trainer = Trainer(cfg, data, ckpt_dir="/tmp/quickstart_ckpt", ckpt_every=10,
-                  lr=5e-3)
-trainer.train(15)
-print(f"trained to step {trainer.step}; "
-      f"loss {trainer.history[0]['loss']:.3f} -> "
-      f"{trainer.history[-1]['loss']:.3f}")
+# 2. train it for a few steps (fault-tolerant loop, checkpoints included);
+# fresh ckpt dir per run (a reused one would restore past the train loop)
+ckpt_dir = tempfile.mkdtemp(prefix="quickstart_")
+try:
+    data = make_pipeline(cfg, seq_len=48, global_batch=4)
+    trainer = Trainer(cfg, data, ckpt_dir=ckpt_dir, ckpt_every=10, lr=5e-3)
+    trainer.train(15)
+    print(f"trained to step {trainer.step}; "
+          f"loss {trainer.history[0]['loss']:.3f} -> "
+          f"{trainer.history[-1]['loss']:.3f}")
 
-# 3. serve it disaggregated: 1 prefill engine + 1 decode engine, KV handoff
-prefill_pool = [Engine(0, cfg, trainer.params, slots=4, capacity=64)]
-decode_pool = [Engine(1, cfg, trainer.params, slots=4, capacity=64)]
-orch = DisaggOrchestrator(prefill_pool, decode_pool)
+    # 3. serve it disaggregated: 1 prefill + 1 decode engine, KV handoff
+    cluster = Cluster({
+        "prefill": [Engine(0, cfg, trainer.params, slots=4, capacity=64)],
+        "decode": [Engine(1, cfg, trainer.params, slots=4, capacity=64)]})
 
-gen = TrafficGen(vocab=cfg.vocab_size, rate=30.0,
-                 pattern=TrafficPattern("quick", isl=32, osl=8), seed=0)
-metrics = orch.run(gen.generate(10.0, max_requests=6))
-print("serving metrics:", {k: round(v, 4) for k, v in metrics.items()})
-print(f"KV transfers: {orch.stats.transfers} "
-      f"({orch.stats.transferred_bytes / 2**20:.1f} MiB)")
-assert metrics["completed"] == 6
+    work = OpenLoopWorkload(Poisson(30.0), FixedShape(isl=32, osl=8),
+                            vocab=cfg.vocab_size, seed=0,
+                            max_requests=6, horizon_s=10.0)
+    metrics = cluster.serve(work)
+    print("serving metrics:", {k: round(v, 4) for k, v in metrics.items()})
+    print(f"KV transfers: {cluster.stats.transfers} "
+          f"({cluster.stats.transferred_bytes / 2**20:.1f} MiB)")
+    assert metrics["completed"] == 6
+finally:
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
 print("quickstart OK")

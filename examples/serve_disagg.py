@@ -13,13 +13,12 @@ demonstrates elastic failover by killing a decode engine mid-run.
 import jax
 
 from repro.configs import get_smoke_config
-from repro.core.traffic import TrafficPattern
 from repro.models import transformer as T
 from repro.serving.cluster import Cluster
 from repro.serving.engine import Engine
 from repro.serving.policies import (ElasticPolicy, FCFSScheduler,
                                     KVLocalityRouter, LeastLoadedRouter)
-from repro.serving.request import TrafficGen
+from repro.workloads import Burst, FixedShape, OpenLoopWorkload
 
 cfg = get_smoke_config("phi3-medium-14b")
 params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -28,9 +27,9 @@ CAP = ISL + OSL + 8
 
 
 def traffic(seed):
-    gen = TrafficGen(vocab=cfg.vocab_size, rate=1e6,   # burst arrival
-                     pattern=TrafficPattern("ph", ISL, OSL), seed=seed)
-    return gen.generate(60.0, max_requests=N)
+    # a real burst arrival process (not the old rate=1e6 Poisson hack)
+    return OpenLoopWorkload(Burst(N, at=0.0), FixedShape(ISL, OSL),
+                            vocab=cfg.vocab_size, seed=seed)
 
 
 def engines(n, base):
@@ -44,7 +43,7 @@ print(f"== prefill-heavy traffic: ISL={ISL} OSL={OSL}, {N} requests ==")
 dis = Cluster({"prefill": engines(1, 0), "decode": engines(2, 10)},
               scheduler=FCFSScheduler(), router=LeastLoadedRouter(),
               rate_matcher=ElasticPolicy())
-m_dis = dis.run(traffic(1))
+m_dis = dis.serve(traffic(1))
 print("disaggregated:", {k: round(v, 4) for k, v in m_dis.items()})
 print(f"  kv transfers: {dis.stats.transfers} "
       f"({dis.stats.transferred_bytes/2**20:.1f} MiB)")
@@ -52,7 +51,7 @@ print(f"  kv transfers: {dis.stats.transfers} "
 # --- co-located: 3 dual-role engines, prefill preempts decode ------------
 co = Cluster({"mixed": engines(3, 20)},
              scheduler=FCFSScheduler(), router=KVLocalityRouter())
-m_co = co.run(traffic(2))
+m_co = co.serve(traffic(2))
 print("co-located   :", {k: round(v, 4) for k, v in m_co.items()})
 assert co.stats.transfers == 0      # KV never leaves the producing engine
 
@@ -74,7 +73,7 @@ def flaky(toks):
         d1.fail()
     return orig(toks)
 d1.decode_step = flaky
-m_fail = orch.run(traffic(3))
+m_fail = orch.serve(traffic(3))
 print(f"completed {m_fail['completed']}/{N} despite "
       f"{orch.stats.engine_failures} engine failure(s); "
       f"{orch.stats.requeued} request(s) re-queued and replayed")

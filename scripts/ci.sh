@@ -14,4 +14,8 @@ python -m pytest -x -q
 echo "== smoke: all model families =="
 python scripts/dev_smoke.py
 
+echo "== smoke: examples (tiny configs) =="
+python examples/quickstart.py
+python examples/multi_turn_sessions.py
+
 echo "CI OK"

@@ -67,13 +67,19 @@ def enumerate_mappings(model: PerfLLM, sys_: SystemConfig,
 
 def sweep_prefill(model: PerfLLM, isl: int, sys_: SystemConfig = DEFAULT_SYSTEM,
                   batches: Optional[List[int]] = None,
-                  max_chips: Optional[int] = None) -> List[DesignPoint]:
+                  max_chips: Optional[int] = None,
+                  mem_isl: Optional[int] = None) -> List[DesignPoint]:
+    """``isl`` drives prefill *compute*; ``mem_isl`` (>= isl) drives the HBM
+    capacity check. They differ under KV reuse (``WorkloadSummary.
+    reuse_fraction``): cached prefix tokens skip the FLOPs but their KV must
+    still be resident."""
     batches = batches or _pow2(1, 64)
+    mem_isl = mem_isl or isl
     pts = []
     for m in enumerate_mappings(model, sys_, prefill=True,
                                 max_chips=max_chips):
         for b in batches:
-            if not hbm_fits(model, m, b, isl, sys_):
+            if not hbm_fits(model, m, b, mem_isl, sys_):
                 continue
             perf = prefill_perf(model, m, b, isl, sys_)
             pts.append(DesignPoint(m, b, perf, "prefill"))

@@ -31,17 +31,48 @@ def disaggregated_frontier(model: PerfLLM, isl: int, osl: int,
                            sys_: SystemConfig = DEFAULT_SYSTEM, *,
                            ftl_cutoff: float = FTL_CUTOFF_DEFAULT,
                            ttl_targets: Optional[Sequence[float]] = None,
-                           max_chips: Optional[int] = None
+                           max_chips: Optional[int] = None,
+                           reuse_fraction: float = 0.0
                            ) -> List[Point]:
-    pre = sweep_prefill(model, isl, sys_, max_chips=max_chips)
+    """``reuse_fraction`` models KV-cache reuse (multi-turn / shared-prefix
+    workloads): prefill computes only the un-cached ``isl * (1 - reuse)``
+    tokens, while HBM residency and decode context still span the full
+    ``isl + osl``."""
+    assert 0.0 <= reuse_fraction < 1.0, reuse_fraction
+    isl_eff = max(1, round(isl * (1.0 - reuse_fraction)))
+    pre = sweep_prefill(model, isl_eff, sys_, max_chips=max_chips,
+                        mem_isl=isl)
     dec = sweep_decode(model, isl + osl // 2, sys_, max_chips=max_chips,
                        max_ctx=isl + osl)
-    matched = dynamic_rate_match(pre, dec, isl=isl, osl=osl,
+    matched = dynamic_rate_match(pre, dec, isl=isl_eff, osl=osl,
                                  ftl_cutoff=ftl_cutoff,
                                  ttl_targets=list(ttl_targets or
                                                   default_ttl_targets()))
     pts = [(r.tps_per_user, r.overall_tput_per_chip) for r in matched]
     return pareto_frontier(pts)
+
+
+def workload_frontier(model: PerfLLM, workload,
+                      sys_: SystemConfig = DEFAULT_SYSTEM, *,
+                      mode: str = "disagg", **kw) -> List[Point]:
+    """Frontier for a ``repro.workloads`` scenario object (or a bare
+    ``WorkloadSummary``): the analytic sweep consumes the same
+    ``(isl, osl, reuse_fraction)`` marginals the executable simulator
+    serves, so both evaluators see one scenario definition.
+
+    ``mode``: ``"disagg"`` (reuse-aware, Fig 2 right) or ``"coloc"``
+    (Fig 2 left; reuse ignored — the co-located perf model has no
+    prefix-cache term)."""
+    summary = workload.summary() if hasattr(workload, "summary") else workload
+    isl = max(1, round(summary.isl))
+    osl = max(1, round(summary.osl))
+    if mode == "disagg":
+        return disaggregated_frontier(
+            model, isl, osl, sys_,
+            reuse_fraction=summary.reuse_fraction, **kw)
+    if mode == "coloc":
+        return colocated_frontier(model, isl, osl, sys_, **kw)
+    raise ValueError(f"mode must be 'disagg' or 'coloc': {mode!r}")
 
 
 def colocated_frontier(model: PerfLLM, isl: int, osl: int,

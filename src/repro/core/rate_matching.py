@@ -174,3 +174,23 @@ def dynamic_rate_match(prefill_pts: Sequence[DesignPoint],
             continue
         out.append(max(cands, key=lambda r: r.overall_tput_per_chip))
     return out
+
+
+def dynamic_rate_match_for(prefill_pts: Sequence[DesignPoint],
+                           decode_pts: Sequence[DesignPoint], summary, *,
+                           ftl_cutoff: float,
+                           ttl_targets: Sequence[float],
+                           tolerance: float = 0.03
+                           ) -> List[RateMatchedPoint]:
+    """Rate matching driven by a scenario's marginals: ``summary`` is any
+    object with ``effective_isl`` / ``osl`` (``workloads.WorkloadSummary``
+    duck-typed, so ``core`` stays import-independent of the workload
+    layer). KV reuse enters through ``effective_isl``: the prefill sweep
+    fed in should have been built at that token count (``design_space.
+    sweep_prefill(..., mem_isl=full_isl)``)."""
+    return dynamic_rate_match(
+        prefill_pts, decode_pts,
+        isl=max(1, round(summary.effective_isl)),
+        osl=max(1, round(summary.osl)),
+        ftl_cutoff=ftl_cutoff, ttl_targets=ttl_targets,
+        tolerance=tolerance)

@@ -2,13 +2,15 @@
 
 Runs a real (small) model through the policy-driven ``Cluster`` runtime —
 role-tagged engine pools + KV handoff + IFB + pluggable scheduler/router/
-rate-matcher — and prints SLA metrics. On a pod this is where the mesh +
-params_shardings would be installed (launch/dryrun.py proves those lower);
-on CPU we serve the smoke configs end-to-end.
+rate-matcher — fed by a composable ``repro.workloads`` scenario, and
+prints SLA metrics. On a pod this is where the mesh + params_shardings
+would be installed (launch/dryrun.py proves those lower); on CPU we serve
+the smoke configs end-to-end.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
       --prefill-engines 1 --decode-engines 2 --requests 16 --isl 64 --osl 16 \
-      --scheduler fcfs --router least-loaded --rate-matcher elastic
+      --scheduler fcfs --router least-loaded --rate-matcher elastic \
+      --workload poisson        # or burst / diurnal / sessions / a trace
 """
 from __future__ import annotations
 
@@ -19,7 +21,6 @@ import sys
 import jax
 
 from repro.configs import ARCH_IDS, get_smoke_config
-from repro.core.traffic import TrafficPattern
 from repro.models import transformer as T
 from repro.serving.cluster import Cluster
 from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
@@ -29,7 +30,8 @@ from repro.serving.policies import (ChunkedPiggybackScheduler, ElasticPolicy,
                                     KVLocalityRouter, LeastLoadedRouter,
                                     PrefixAffinityScheduler, PriorityScheduler,
                                     RoundRobinRouter, StaticSplitRateMatcher)
-from repro.serving.request import TrafficGen
+from repro.workloads import (Burst, Diurnal, FixedShape, OpenLoopWorkload,
+                             Poisson, SessionWorkload, TraceReplay)
 
 SCHEDULERS = {
     "fcfs": lambda chunk: FCFSScheduler(),
@@ -42,6 +44,34 @@ ROUTERS = {
     "least-loaded": LeastLoadedRouter,
     "kv-locality": KVLocalityRouter,
 }
+WORKLOADS = ("poisson", "burst", "diurnal", "sessions")
+
+
+def build_workload(args, vocab: int):
+    """(workload, expected_completions) from the CLI axis."""
+    shape = FixedShape(args.isl, args.osl)
+    if args.trace:
+        w = TraceReplay(args.trace, vocab=vocab, seed=args.seed)
+        if not w.requests:
+            raise SystemExit(f"--trace {args.trace}: no records found")
+        return w, len(w.requests)
+    if args.workload == "sessions":
+        w = SessionWorkload(vocab=vocab, seed=args.seed,
+                            sessions=args.requests, turns=args.turns,
+                            families=max(args.requests // 2, 1),
+                            system_prefix_len=args.isl // 2,
+                            user_isl=max(args.isl // 2, 1), osl=args.osl,
+                            think_time=args.think_time)
+        return w, args.requests * args.turns
+    arrivals = {
+        "poisson": lambda: Poisson(args.rate),
+        "burst": lambda: Burst(args.requests),
+        "diurnal": lambda: Diurnal(args.rate, amplitude=0.8,
+                                   period=args.requests / args.rate),
+    }[args.workload]()
+    w = OpenLoopWorkload(arrivals, shape, vocab=vocab, seed=args.seed,
+                         max_requests=args.requests, horizon_s=3600.0)
+    return w, args.requests
 
 
 def main(argv=None):
@@ -55,6 +85,15 @@ def main(argv=None):
                     "kv-locality (coloc)")
     ap.add_argument("--rate-matcher", choices=["none", "elastic", "static"],
                     default="elastic")
+    ap.add_argument("--workload", choices=WORKLOADS, default="poisson",
+                    help="arrival/scenario shape; 'sessions' is closed-loop "
+                    "multi-turn (--requests = #conversations)")
+    ap.add_argument("--trace", default=None,
+                    help="JSONL trace to replay (overrides --workload)")
+    ap.add_argument("--turns", type=int, default=3,
+                    help="turns per conversation for --workload sessions")
+    ap.add_argument("--think-time", type=float, default=0.05,
+                    help="seconds between a turn's completion and the next")
     ap.add_argument("--static-alpha", type=float, default=0.5,
                     help="prefill:decode ratio for --rate-matcher static")
     ap.add_argument("--prefill-engines", type=int, default=1)
@@ -70,7 +109,11 @@ def main(argv=None):
 
     cfg = get_smoke_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
-    capacity = args.isl + args.osl + 8
+    work, expected = build_workload(args, cfg.vocab_size)
+    # size engines for the workload's actual shapes (traces, growing
+    # multi-turn contexts), falling back to the CLI pattern
+    max_ctx = getattr(work, "max_context", lambda: None)()
+    capacity = (max_ctx or (args.isl + args.osl)) + 8
     if args.scheduler == "prefix-affinity" and args.piggyback_chunk <= 0:
         ap.error("--scheduler prefix-affinity needs --piggyback-chunk > 0 "
                  "(engines must be built with a PrefixCache)")
@@ -81,11 +124,6 @@ def main(argv=None):
     def mk(i):
         return Engine(i, cfg, params, slots=args.slots, capacity=capacity,
                       chunk_size=chunk)
-
-    gen = TrafficGen(vocab=cfg.vocab_size, rate=args.rate,
-                     pattern=TrafficPattern("cli", args.isl, args.osl),
-                     seed=args.seed)
-    reqs = gen.generate(3600.0, max_requests=args.requests)
 
     scheduler = SCHEDULERS[args.scheduler](chunk)
     sched_name = args.scheduler
@@ -102,7 +140,7 @@ def main(argv=None):
             {"prefill": [mk(i) for i in range(args.prefill_engines)],
              "decode": [mk(100 + i) for i in range(args.decode_engines)]},
             scheduler=scheduler, router=router, rate_matcher=rate_matcher)
-        metrics = cluster.run(reqs)
+        metrics = cluster.serve(work)
         extra = {"transfers": cluster.stats.transfers,
                  "transferred_MB": cluster.stats.transferred_bytes / 2**20,
                  "prefill_pool": len(cluster.prefill_pool),
@@ -126,16 +164,17 @@ def main(argv=None):
             {"mixed": [mk(i) for i in range(args.prefill_engines
                                             + args.decode_engines)]},
             scheduler=scheduler, router=router, rate_matcher=None)
-        metrics = cluster.run(reqs)
+        metrics = cluster.serve(work)
         extra = {"transfers": cluster.stats.transfers}
 
     print(json.dumps({"arch": cfg.name, "mode": args.mode,
+                      "workload": ("trace" if args.trace else args.workload),
                       "scheduler": sched_name,
                       "router": router_name,
                       "rate_matcher": rm_name,
                       **{k: round(v, 4) for k, v in metrics.items()},
                       **extra}, indent=1, default=str))
-    assert metrics["completed"] == args.requests
+    assert metrics["completed"] == expected
     return metrics
 
 

@@ -7,6 +7,12 @@ engine step wall times advance the cluster clock, so FTL/TTL/throughput
 metrics reflect actual computation (scaled by straggler-injection factors
 where tests use them).
 
+Traffic comes in through ``serve(workload)``: a ``repro.workloads``
+``Workload`` is pulled incrementally as the virtual clock advances and is
+fed every completion back, so closed-loop scenarios (multi-turn sessions
+whose turn N+1 only exists after turn N finishes) are first-class.
+``run(requests)`` is the static special case (a ``StaticWorkload``).
+
 Every scheduling decision is delegated to three pluggable seams
 (``serving/policies.py``):
 
@@ -75,6 +81,7 @@ class Cluster:
                                         Optional[Engine]]] = []
         self.stats = PoolStats()
         self.now = 0.0
+        self._workload = None       # set while serve() is driving
 
     # -- pool views (also the legacy orchestrator attribute surface) -------
 
@@ -134,6 +141,27 @@ class Cluster:
 
     def run(self, requests: List[Request], *, max_wall_s: float = 1e9
             ) -> Dict[str, float]:
+        """Serve a pre-materialized request list (a ``StaticWorkload``)."""
+        from repro.workloads.base import StaticWorkload
+        return self.serve(StaticWorkload(requests), max_wall_s=max_wall_s)
+
+    def serve(self, workload, *, until: Optional[float] = None,
+              max_wall_s: float = 1e9) -> Dict[str, float]:
+        """Drive a ``Workload`` through the virtual-time event loop.
+
+        Events are pulled incrementally (``workload.poll``) as the clock
+        advances, and completions are fed back (``workload.on_complete``)
+        the moment a request finishes — closed-loop workloads (multi-turn
+        sessions with think time) schedule their next event from that
+        feedback. ``until`` stops *admitting* new arrivals at that virtual
+        time and drains what is in flight; ``max_wall_s`` hard-stops the
+        loop. Returns ``sla_metrics`` over every request the workload
+        emitted.
+
+        Each call is one episode: the virtual clock restarts at 0 so
+        workload timestamps are serve-relative (back-to-back calls — e.g.
+        a jit warm-up pass then a measured pass — stay comparable).
+        Engine-local clocks/telemetry persist across episodes."""
         # an empty capability would spin the virtual clock to max_wall_s
         if not self.prefill_capable():
             raise ValueError("cluster has no prefill-capable engines "
@@ -141,18 +169,48 @@ class Cluster:
         if not self.decode_capable():
             raise ValueError("cluster has no decode-capable engines "
                              "(decode or mixed pool)")
-        self.queue = sorted(requests, key=lambda r: r.arrival_t)
+        served: List[Request] = []
+        self.now = 0.0
+        # a previous episode cut short by max_wall_s may have left queued
+        # or in-flight work behind; each serve() starts clean — stale slot
+        # occupants must not decode into (or complete against) this episode
+        self.queue = []
+        self.pending_insert = []
+        for eng in self.engines():
+            for slot in list(eng.slot_req):
+                eng.evict(slot)
+        on_episode = getattr(self.scheduler, "on_episode", None)
+        if on_episode is not None:
+            on_episode(self)    # e.g. drop per-request affinity memos
+        self._workload = workload
         prepare = getattr(self.rate_matcher, "prepare", None)
         if prepare is not None:
             prepare(self)       # e.g. apply a static split before round 1
-        inflight = True
-        while inflight:
-            inflight = self._step()
-            if self.now > max_wall_s:
-                break
-            if self.rate_matcher is not None:
-                self.rate_matcher.step(self)
-        return sla_metrics(requests)
+        try:
+            while True:
+                horizon = self.now if until is None \
+                    else min(self.now, until)
+                for r in workload.poll(horizon):
+                    served.append(r)
+                    self.queue.append(r)    # chronological; requeues stay
+                    #                         at the front (reset_for_requeue)
+                progressed = self._step()
+                if self.now > max_wall_s:
+                    break
+                if self.rate_matcher is not None:
+                    self.rate_matcher.step(self)
+                if progressed:
+                    continue
+                # fully idle: jump the clock to the workload's next event
+                # (until is inclusive, matching the poll horizon above)
+                nxt = workload.next_arrival()
+                if nxt is not None and (until is None or nxt <= until):
+                    self.now = max(self.now, nxt)
+                    continue
+                break       # exhausted (or waiting on nothing: drained)
+        finally:
+            self._workload = None
+        return sla_metrics(served)
 
     def _step(self) -> bool:
         """One scheduling round. Returns False when everything is drained."""
@@ -234,4 +292,6 @@ class Cluster:
             if req.done:
                 req.done_t = self.now
                 eng.evict(slot)
+                if self._workload is not None:
+                    self._workload.on_complete(req, self.now)
         return True

@@ -14,9 +14,8 @@ scenarios:
   - ``RateMatcher``: pool sizing over time. How many engines play each role
     (static analytic split vs elastic runtime re-balancing)?
 
-``cluster.Cluster`` drives all three from one virtual-time event loop;
-``disagg.DisaggOrchestrator`` / ``disagg.ColocatedOrchestrator`` are thin
-policy configurations of it.
+``cluster.Cluster`` drives all three from one virtual-time event loop,
+fed by a ``repro.workloads`` scenario through ``Cluster.serve``.
 """
 from __future__ import annotations
 
@@ -92,6 +91,11 @@ class PrefixAffinityScheduler:
         self.chunk = chunk
         self._memo = {}     # (engine_id, rid, cache_version) -> hit length
 
+    def on_episode(self, cluster):
+        """New serve() episode: rids restart, so per-request memos from the
+        previous episode must not alias onto new requests."""
+        self._memo.clear()
+
     def _hit_len(self, engine, req):
         """match_len is an O(entries x isl) scan; memoize per (engine,
         request, cache version) so a scheduling round probes each live pair
@@ -161,7 +165,7 @@ class Router(Protocol):
 
 class FirstFitRouter:
     """Always scan from the head of the decode pool — the legacy
-    ``DisaggOrchestrator`` placement (packs early engines densely)."""
+    orchestrator placement (packs early engines densely)."""
 
     def route(self, cluster, req, src):
         for eng in cluster.decode_capable():

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-import itertools
+import warnings
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -20,6 +20,9 @@ class Request:
     priority: int = 0               # larger = more urgent
     ftl_target_s: Optional[float] = None   # SLA: first-token latency target
     ttl_target_s: Optional[float] = None   # SLA: median inter-token target
+    # conversation identity (set by closed-loop workloads)
+    session_id: Optional[int] = None
+    turn: int = 0                   # 0-based turn index within the session
     # lifecycle timestamps (engine clock, seconds)
     prefill_start_t: Optional[float] = None
     first_token_t: Optional[float] = None
@@ -84,34 +87,42 @@ class Request:
 
 
 class TrafficGen:
-    """Poisson arrivals with constant or lognormal-sampled ISL/OSL."""
+    """DEPRECATED shim: Poisson arrivals with constant or lognormal ISL/OSL,
+    pre-materialized — now a thin wrapper over
+    ``workloads.OpenLoopWorkload(Poisson(rate), shape)``. Build workloads
+    directly (``repro.workloads``) and pass them to ``Cluster.serve``."""
 
     def __init__(self, *, vocab: int, rate: float,
                  pattern: Optional[TrafficPattern] = None,
                  dynamic: Optional[DynamicTraffic] = None, seed: int = 0):
+        warnings.warn(
+            "TrafficGen is a deprecated shim over "
+            "workloads.OpenLoopWorkload; compose a Workload and use "
+            "Cluster.serve() instead", DeprecationWarning, stacklevel=2)
         assert pattern or dynamic
         self.vocab = vocab
         self.rate = rate
         self.pattern = pattern
         self.dynamic = dynamic
-        self.rng = np.random.default_rng(seed)
-        self._ids = itertools.count()
+        self.seed = seed
+        self._calls = 0
+        self._rid = 0
 
     def generate(self, horizon_s: float, max_requests: int = 10_000
                  ) -> List[Request]:
-        t = 0.0
-        out = []
-        while t < horizon_s and len(out) < max_requests:
-            t += self.rng.exponential(1.0 / self.rate)
-            if self.dynamic is not None:
-                (isl, osl), = self.dynamic.sample(1, seed=int(
-                    self.rng.integers(1 << 30)))
-            else:
-                isl, osl = self.pattern.isl, self.pattern.osl
-            prompt = self.rng.integers(
-                0, self.vocab, size=isl).astype(np.int32)
-            out.append(Request(rid=next(self._ids), prompt=prompt,
-                               osl=osl, arrival_t=t))
+        from repro.workloads import (FixedShape, LognormalShape,
+                                     OpenLoopWorkload, Poisson, materialize)
+        shape = (LognormalShape.from_dynamic(self.dynamic)
+                 if self.dynamic is not None
+                 else FixedShape(self.pattern.isl, self.pattern.osl))
+        w = OpenLoopWorkload(
+            Poisson(self.rate), shape, vocab=self.vocab,
+            seed=self.seed + 1_000_003 * self._calls,
+            max_requests=max_requests, horizon_s=horizon_s,
+            start_rid=self._rid)
+        self._calls += 1
+        out = materialize(w)
+        self._rid += len(out)
         return out
 
 

@@ -1,0 +1,31 @@
+"""Workload API: closed-loop scenario generation for ``Cluster.serve()``
+and the analytic sweeps (see docs/workloads.md).
+
+A scenario composes *when* (``arrivals``), *how big* (``shapes``), and
+*how it reacts* (open-loop generators vs closed-loop sessions), and
+summarizes itself to the ``(isl, osl, rate, reuse_fraction)`` marginals
+the analytic side consumes — one scenario object, both evaluators.
+"""
+from repro.workloads.arrivals import (ArrivalProcess, Burst, Diurnal, Merged,
+                                      PiecewiseRate, Poisson)
+from repro.workloads.base import (BATCH, INTERACTIVE, STANDARD, Recorder,
+                                  SLATier, StaticWorkload, Superpose,
+                                  Workload, WorkloadSummary, materialize)
+from repro.workloads.generators import OpenLoopWorkload
+from repro.workloads.sessions import SessionWorkload
+from repro.workloads.shapes import (PATTERN_SHAPES, FixedShape,
+                                    LognormalShape, MixtureShape,
+                                    ShapeSampler)
+from repro.workloads.trace import TraceReplay, record_trace
+
+__all__ = [
+    "Workload", "WorkloadSummary", "StaticWorkload", "Superpose",
+    "Recorder", "materialize",
+    "SLATier", "INTERACTIVE", "STANDARD", "BATCH",
+    "ArrivalProcess", "Poisson", "Burst", "PiecewiseRate", "Diurnal",
+    "Merged",
+    "ShapeSampler", "FixedShape", "LognormalShape", "MixtureShape",
+    "PATTERN_SHAPES",
+    "OpenLoopWorkload", "SessionWorkload",
+    "TraceReplay", "record_trace",
+]

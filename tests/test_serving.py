@@ -11,14 +11,16 @@ from repro.core.traffic import TrafficPattern
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving.cluster import Cluster
-from repro.serving.disagg import ColocatedOrchestrator, DisaggOrchestrator
 from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
 from repro.serving.engine import Engine, PrefixCache
-from repro.serving.policies import (ChunkedPiggybackScheduler, FCFSScheduler,
-                                    KVLocalityRouter, LeastLoadedRouter,
+from repro.serving.policies import (ChunkedPiggybackScheduler, ElasticPolicy,
+                                    FCFSScheduler, KVLocalityRouter,
+                                    LeastLoadedRouter,
                                     PrefixAffinityScheduler, PriorityScheduler,
                                     RoundRobinRouter, StaticSplitRateMatcher)
 from repro.serving.request import Request, TrafficGen, sla_metrics
+from repro.workloads import (FixedShape, OpenLoopWorkload, Poisson, Recorder,
+                             StaticWorkload, materialize)
 
 CFG = ModelConfig(name="serve-tiny", family="dense", num_layers=2, d_model=64,
                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
@@ -35,9 +37,16 @@ def mk(i, params, slots=4, capacity=48):
 
 
 def gen_requests(n, seed=0, isl=16, osl=8, rate=100.0):
-    g = TrafficGen(vocab=CFG.vocab_size, rate=rate,
-                   pattern=TrafficPattern("t", isl, osl), seed=seed)
-    return g.generate(10.0, max_requests=n)
+    w = OpenLoopWorkload(Poisson(rate), FixedShape(isl, osl),
+                         vocab=CFG.vocab_size, seed=seed, max_requests=n,
+                         horizon_s=10.0)
+    return materialize(w)
+
+
+def disagg(params, prefill, decode, *, elastic=None):
+    return Cluster({"prefill": prefill, "decode": decode},
+                   rate_matcher=(ElasticPolicy(elastic)
+                                 if elastic is not None else None))
 
 
 def greedy_reference(params, prompt, osl):
@@ -53,7 +62,7 @@ def greedy_reference(params, prompt, osl):
 
 def test_disagg_serves_exactly_greedy(params):
     reqs = gen_requests(6, seed=1)
-    orch = DisaggOrchestrator([mk(0, params)], [mk(1, params)])
+    orch = disagg(params, [mk(0, params)], [mk(1, params)])
     m = orch.run(reqs, max_wall_s=300)
     assert m["completed"] == 6
     assert orch.stats.transfers == 6
@@ -66,7 +75,7 @@ def test_disagg_ifb_slot_reuse(params):
     """More requests than slots: IFB must reuse slots as requests finish."""
     reqs = gen_requests(10, seed=2, osl=4)
     dec = mk(1, params, slots=3)
-    orch = DisaggOrchestrator([mk(0, params)], [dec])
+    orch = disagg(params, [mk(0, params)], [dec])
     m = orch.run(reqs, max_wall_s=300)
     assert m["completed"] == 10
     assert dec.slots == 3           # never grew
@@ -74,7 +83,9 @@ def test_disagg_ifb_slot_reuse(params):
 
 def test_colocated_chunked_prefill(params):
     reqs = gen_requests(5, seed=3)
-    orch = ColocatedOrchestrator([mk(0, params)], piggyback_chunk=8)
+    orch = Cluster({"mixed": [mk(0, params)]},
+                   scheduler=ChunkedPiggybackScheduler(8),
+                   router=KVLocalityRouter())
     m = orch.run(reqs, max_wall_s=300)
     assert m["completed"] == 5
 
@@ -82,8 +93,8 @@ def test_colocated_chunked_prefill(params):
 def test_decode_engine_failure_requeues(params):
     reqs = gen_requests(8, seed=4, osl=6)
     e_d1, e_d2 = mk(1, params), mk(2, params)
-    orch = DisaggOrchestrator([mk(0, params)], [e_d1, e_d2],
-                              elastic=ElasticRateMatcher())
+    orch = disagg(params, [mk(0, params)], [e_d1, e_d2],
+                  elastic=ElasticRateMatcher())
     fired = [False]
     orig = e_d1.decode_step
     def flaky(toks):
@@ -103,8 +114,8 @@ def test_prefill_engine_failure_failover(params):
     """Losing the only prefill engine must trigger pool failover."""
     reqs = gen_requests(4, seed=5, osl=4)
     e_p = mk(0, params)
-    orch = DisaggOrchestrator([e_p], [mk(1, params), mk(2, params)],
-                              elastic=ElasticRateMatcher())
+    orch = disagg(params, [e_p], [mk(1, params), mk(2, params)],
+                  elastic=ElasticRateMatcher())
     orig = e_p.prefill
     fired = [False]
     def flaky(prompt):
@@ -122,8 +133,8 @@ def test_straggler_drained(params):
     reqs = gen_requests(16, seed=6, osl=12)
     e_d1, e_d2 = mk(1, params), mk(2, params)
     e_d1.slow_down(200.0)                   # inject a hard straggler
-    orch = DisaggOrchestrator(
-        [mk(0, params)], [e_d1, e_d2],
+    orch = disagg(
+        params, [mk(0, params)], [e_d1, e_d2],
         elastic=ElasticRateMatcher(ElasticConfig(check_every=1,
                                                  straggler_factor=5.0)))
     m = orch.run(reqs, max_wall_s=600)
@@ -135,8 +146,8 @@ def test_straggler_drained(params):
 def test_elastic_grows_prefill_pool_under_backlog(params):
     # heavy arrivals, all at t=0 -> backlog -> decode engine migrates
     reqs = gen_requests(12, seed=7, osl=3, rate=1e6)
-    orch = DisaggOrchestrator(
-        [mk(0, params)], [mk(1, params), mk(2, params), mk(3, params)],
+    orch = disagg(
+        params, [mk(0, params)], [mk(1, params), mk(2, params), mk(3, params)],
         elastic=ElasticRateMatcher(ElasticConfig(check_every=1,
                                                  queue_high=3)))
     m = orch.run(reqs, max_wall_s=600)
@@ -154,11 +165,10 @@ def test_rwkv_family_serves(params):
     p = T.init_params(cfg, jax.random.PRNGKey(1))
     pre = Engine(0, cfg, p, slots=4, capacity=48)
     dec = Engine(1, cfg, p, slots=4, capacity=48)
-    g = TrafficGen(vocab=97, rate=100.0,
-                   pattern=TrafficPattern("t", 12, 5), seed=8)
-    reqs = g.generate(5.0, max_requests=4)
-    orch = DisaggOrchestrator([pre], [dec])
-    m = orch.run(reqs, max_wall_s=300)
+    w = OpenLoopWorkload(Poisson(100.0), FixedShape(12, 5), vocab=97,
+                         seed=8, max_requests=4, horizon_s=5.0)
+    orch = Cluster({"prefill": [pre], "decode": [dec]})
+    m = orch.serve(w, max_wall_s=300)
     assert m["completed"] == 4
     assert orch.stats.transferred_bytes > 0
 
@@ -179,45 +189,65 @@ def test_prefix_cache_reuse_exact(params):
 
 
 # ---------------------------------------------------------------------------
-# Cluster API: legacy-orchestrator parity
+# Cluster API: serve(workload) / run(list) parity
 # ---------------------------------------------------------------------------
 
-def test_cluster_fcfs_parity_with_disagg_orchestrator(params):
-    """An explicit FCFS/round-robin Cluster reproduces the (deprecated)
-    DisaggOrchestrator: same completions, identical token streams (greedy
-    decode is deterministic), FTL/TTL in the same ballpark."""
-    reqs_old = gen_requests(6, seed=1)
-    legacy = DisaggOrchestrator([mk(0, params)], [mk(1, params)])
-    m_old = legacy.run(reqs_old, max_wall_s=300)
+def test_serve_static_workload_matches_run_exactly(params):
+    """Acceptance: ``serve(StaticWorkload(reqs))`` reproduces ``run(reqs)``
+    token streams exactly — the static list is just a workload."""
+    reqs_run = gen_requests(6, seed=1)
+    cl_run = Cluster({"prefill": [mk(0, params)], "decode": [mk(1, params)]},
+                     scheduler=FCFSScheduler(), router=RoundRobinRouter())
+    m_run = cl_run.run(reqs_run, max_wall_s=300)
 
-    reqs_new = gen_requests(6, seed=1)
-    cl = Cluster({"prefill": [mk(2, params)], "decode": [mk(3, params)]},
-                 scheduler=FCFSScheduler(), router=RoundRobinRouter())
-    m_new = cl.run(reqs_new, max_wall_s=300)
+    reqs_srv = gen_requests(6, seed=1)
+    cl_srv = Cluster({"prefill": [mk(2, params)], "decode": [mk(3, params)]},
+                     scheduler=FCFSScheduler(), router=RoundRobinRouter())
+    m_srv = cl_srv.serve(StaticWorkload(reqs_srv), max_wall_s=300)
 
-    assert m_new["completed"] == m_old["completed"] == 6
-    assert cl.stats.transfers == legacy.stats.transfers == 6
-    for r_old, r_new in zip(reqs_old, reqs_new):
-        assert r_old.output and r_old.output == r_new.output, r_old.rid
+    assert m_srv["completed"] == m_run["completed"] == 6
+    assert cl_srv.stats.transfers == cl_run.stats.transfers == 6
+    for r_run, r_srv in zip(reqs_run, reqs_srv):
+        assert r_run.output and r_run.output == r_srv.output, r_run.rid
     # wall-time-driven virtual clocks: same op sequence, so latencies agree
     # to well within an order of magnitude
     for k in ("p50_ftl_s", "p50_ttl_s"):
-        assert 0.2 < m_new[k] / max(m_old[k], 1e-9) < 5.0, (k, m_new, m_old)
+        assert 0.2 < m_srv[k] / max(m_run[k], 1e-9) < 5.0, (k, m_srv, m_run)
 
 
-def test_cluster_fcfs_parity_with_colocated_orchestrator(params):
-    legacy = ColocatedOrchestrator([mk(0, params)], piggyback_chunk=8)
-    m_old = legacy.run(gen_requests(5, seed=3), max_wall_s=300)
+def test_serve_pulls_lazy_workload_like_materialized_list(params):
+    """Serving a lazy OpenLoopWorkload == running its materialized list:
+    incremental event pull must not change what gets generated."""
+    def work():
+        return OpenLoopWorkload(Poisson(100.0), FixedShape(16, 8),
+                                vocab=CFG.vocab_size, seed=3,
+                                max_requests=5, horizon_s=10.0)
 
-    cl = Cluster({"mixed": [mk(1, params)]},
-                 scheduler=ChunkedPiggybackScheduler(8),
-                 router=KVLocalityRouter())
-    m_new = cl.run(gen_requests(5, seed=3), max_wall_s=300)
+    reqs = materialize(work())
+    Cluster({"mixed": [mk(0, params)]}, router=KVLocalityRouter()).run(
+        reqs, max_wall_s=300)
 
-    assert m_new["completed"] == m_old["completed"] == 5
+    cl = Cluster({"mixed": [mk(1, params)]}, router=KVLocalityRouter())
+    lazy = Recorder(work())
+    m = cl.serve(lazy, max_wall_s=300)
+    assert m["completed"] == 5 and lazy.exhausted()
     assert cl.stats.transfers == 0      # KV never crossed engines
-    for k in ("p50_ftl_s", "p50_ttl_s"):
-        assert 0.2 < m_new[k] / max(m_old[k], 1e-9) < 5.0, (k, m_new, m_old)
+    for a, b in zip(reqs, sorted(lazy.emitted, key=lambda r: r.rid)):
+        assert a.arrival_t == b.arrival_t and (a.prompt == b.prompt).all()
+        assert a.output and a.output == b.output, a.rid
+
+
+def test_trafficgen_is_a_deprecated_workload_shim():
+    with pytest.deprecated_call():
+        g = TrafficGen(vocab=CFG.vocab_size, rate=100.0,
+                       pattern=TrafficPattern("t", 16, 8), seed=0)
+    reqs = g.generate(10.0, max_requests=4)
+    assert len(reqs) == 4
+    assert [r.rid for r in reqs] == [0, 1, 2, 3]
+    assert all(r.isl == 16 and r.osl == 8 for r in reqs)
+    # a second generate() call continues rids and draws fresh arrivals
+    more = g.generate(10.0, max_requests=2)
+    assert [r.rid for r in more] == [4, 5]
 
 
 def test_cluster_parity_queues_drain_identically(params):

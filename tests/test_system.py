@@ -13,14 +13,13 @@ import numpy as np
 from repro.core.frontiers import disaggregated_frontier
 from repro.core.pareto import area_under_frontier
 from repro.core.paper_models import LLAMA31_70B
-from repro.core.traffic import DynamicTraffic, TrafficPattern
+from repro.core.traffic import DynamicTraffic
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving.cluster import Cluster
-from repro.serving.disagg import DisaggOrchestrator
 from repro.serving.engine import Engine
 from repro.serving.policies import KVLocalityRouter
-from repro.serving.request import TrafficGen
+from repro.workloads import FixedShape, OpenLoopWorkload, Poisson
 
 CFG = ModelConfig(name="sys-tiny", family="dense", num_layers=2, d_model=64,
                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
@@ -32,19 +31,20 @@ def test_disagg_reduces_decode_stall_under_prefill_heavy_load():
     decode stalls during long prefills (worse p99 TTL); a disaggregated
     decode pool never runs prefill so its in-decode TTL tail is flat."""
     params = T.init_params(CFG, jax.random.PRNGKey(0))
-    # prefill-heavy: long prompts, short outputs
-    def reqs(seed):
-        g = TrafficGen(vocab=97, rate=1e6,
-                       pattern=TrafficPattern("ph", 96, 6), seed=seed)
-        return g.generate(10.0, max_requests=6)
+    # prefill-heavy near-burst: long prompts, short outputs (the micro
+    # arrival offsets matter: they let co-located decode interleave with
+    # prefills, which is exactly the stall being measured)
+    def work(seed):
+        return OpenLoopWorkload(Poisson(1e6), FixedShape(96, 6), vocab=97,
+                                seed=seed, max_requests=6, horizon_s=10.0)
 
     co = Cluster({"mixed": [Engine(0, CFG, params, slots=4, capacity=128)]},
                  router=KVLocalityRouter())
-    m_co = co.run(reqs(0), max_wall_s=600)
+    m_co = co.serve(work(0), max_wall_s=600)
 
     dis = Cluster({"prefill": [Engine(1, CFG, params, slots=4, capacity=128)],
                    "decode": [Engine(2, CFG, params, slots=4, capacity=128)]})
-    m_dis = dis.run(reqs(1), max_wall_s=600)
+    m_dis = dis.serve(work(1), max_wall_s=600)
 
     assert m_co["completed"] == 6 and m_dis["completed"] == 6
     # in-decode inter-token stall: co-located p99 TTL >> its p50 (prefill
@@ -85,10 +85,10 @@ def test_serving_then_training_roundtrip():
         tr.train(6)
         eng_p = Engine(0, CFG, tr.params, slots=2, capacity=48)
         eng_d = Engine(1, CFG, tr.params, slots=2, capacity=48)
-        g = TrafficGen(vocab=97, rate=100.0,
-                       pattern=TrafficPattern("t", 12, 4), seed=9)
-        orch = DisaggOrchestrator([eng_p], [eng_d])
-        m = orch.run(g.generate(5.0, max_requests=3), max_wall_s=300)
+        w = OpenLoopWorkload(Poisson(100.0), FixedShape(12, 4), vocab=97,
+                             seed=9, max_requests=3, horizon_s=5.0)
+        cluster = Cluster({"prefill": [eng_p], "decode": [eng_d]})
+        m = cluster.serve(w, max_wall_s=300)
         assert m["completed"] == 3
     finally:
         shutil.rmtree(d)

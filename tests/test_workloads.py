@@ -1,0 +1,384 @@
+"""Workload API: determinism, closed-loop ordering, arrival processes,
+trace replay, summary marginals, and the prefix-affinity acceptance
+scenario (multi-turn shared-prefix sessions on the Cluster runtime)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.frontiers import workload_frontier
+from repro.core.paper_models import LLAMA31_70B
+from repro.core.rate_matching import dynamic_rate_match_for
+from repro.core.design_space import sweep_decode, sweep_prefill
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.cluster import Cluster
+from repro.serving.engine import Engine
+from repro.serving.policies import (FCFSScheduler, KVLocalityRouter,
+                                    PrefixAffinityScheduler, PriorityScheduler,
+                                    RoundRobinRouter)
+from repro.workloads import (BATCH, INTERACTIVE, Burst, Diurnal, FixedShape,
+                             LognormalShape, Merged, MixtureShape,
+                             OpenLoopWorkload, PiecewiseRate, Poisson,
+                             Recorder, SessionWorkload, StaticWorkload,
+                             Superpose, TraceReplay, WorkloadSummary,
+                             materialize, record_trace)
+
+CFG = ModelConfig(name="wl-tiny", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                  remat=False, logits_chunk=32, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def mk(i, params, slots=4, capacity=64, chunk_size=0):
+    return Engine(i, CFG, params, slots=slots, capacity=capacity,
+                  chunk_size=chunk_size)
+
+
+# ---------------------------------------------------------------------------
+# Determinism
+# ---------------------------------------------------------------------------
+
+def _stream(reqs):
+    return [(r.rid, round(r.arrival_t, 12), r.isl, r.osl,
+             tuple(int(t) for t in r.prompt)) for r in reqs]
+
+
+def test_open_loop_same_seed_identical_event_stream():
+    def work():
+        return OpenLoopWorkload(
+            Poisson(50.0),
+            MixtureShape([(0.7, FixedShape(24, 6)),
+                          (0.3, LognormalShape(16, 8))]),
+            vocab=97, seed=11, max_requests=40, horizon_s=30.0,
+            tier=INTERACTIVE)
+    a, b = materialize(work()), materialize(work())
+    assert _stream(a) == _stream(b)
+    assert all(r.priority == INTERACTIVE.priority for r in a)
+
+
+def test_open_loop_stream_stable_across_serve_reruns(params):
+    """The *same scenario* served twice (fresh instances, one cluster)
+    emits the identical stream both times — serving must not perturb
+    generation."""
+    def work():
+        return OpenLoopWorkload(Poisson(100.0), FixedShape(16, 4), vocab=97,
+                                seed=7, max_requests=6, horizon_s=10.0)
+    cl = Cluster({"mixed": [mk(0, params)]}, router=KVLocalityRouter())
+    rec1, rec2 = Recorder(work()), Recorder(work())
+    m1 = cl.serve(rec1, max_wall_s=300)
+    m2 = cl.serve(rec2, max_wall_s=300)
+    assert m1["completed"] == m2["completed"] == 6
+    assert _stream(rec1.emitted) == _stream(rec2.emitted)
+    for a, b in zip(rec1.emitted, rec2.emitted):
+        assert a.output == b.output          # greedy decode: same tokens
+
+
+def test_session_workload_same_seed_same_conversations(params):
+    """Closed-loop determinism: prompt content per session is a function
+    of the seed alone (per-session rng streams), independent of how two
+    different clusters interleave completions."""
+    def work():
+        return SessionWorkload(vocab=97, seed=5, sessions=3, turns=2,
+                               families=1, system_prefix_len=16,
+                               user_isl=8, osl=4, think_time=0.01)
+    recs = []
+    for base, slots in ((0, 2), (10, 4)):   # different concurrency
+        cl = Cluster({"mixed": [mk(base, params, slots=slots, capacity=96)]})
+        rec = Recorder(work())
+        m = cl.serve(rec, max_wall_s=300)
+        assert m["completed"] == 6
+        recs.append(rec.emitted)
+    for a, b in zip(sorted(recs[0], key=lambda r: (r.session_id, r.turn)),
+                    sorted(recs[1], key=lambda r: (r.session_id, r.turn))):
+        assert a.session_id == b.session_id and a.turn == b.turn
+        assert (a.prompt == b.prompt).all()
+        assert a.output == b.output
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop ordering
+# ---------------------------------------------------------------------------
+
+def test_closed_loop_turns_never_arrive_before_prior_done(params):
+    think = 0.02
+    rec = Recorder(SessionWorkload(vocab=97, seed=1, sessions=3, turns=3,
+                                   families=2, system_prefix_len=16,
+                                   user_isl=8, osl=4, think_time=think))
+    cl = Cluster({"mixed": [mk(0, params, capacity=128)]})
+    m = cl.serve(rec, max_wall_s=600)
+    assert m["completed"] == 9
+    by_sid = {}
+    for r in rec.emitted:
+        by_sid.setdefault(r.session_id, []).append(r)
+    assert len(by_sid) == 3
+    for sid, turns in by_sid.items():
+        turns.sort(key=lambda r: r.turn)
+        assert [r.turn for r in turns] == [0, 1, 2]
+        for prev, nxt in zip(turns, turns[1:]):
+            assert prev.done_t is not None
+            # turn N+1 exists only after turn N completed + think time
+            assert nxt.arrival_t >= prev.done_t + think - 1e-12, sid
+            # and its prompt starts with the full prior context
+            prior = np.concatenate([prev.prompt,
+                                    np.asarray(prev.output, np.int32) % 97])
+            assert (nxt.prompt[:len(prior)] == prior).all()
+
+
+def test_closed_loop_workload_cannot_be_prematerialized():
+    """next_arrival() is None while a session waits on a completion: the
+    closed loop genuinely depends on serve-time feedback."""
+    with pytest.raises(ValueError, match="closed-loop"):
+        materialize(SessionWorkload(vocab=97, seed=0, sessions=1, turns=2,
+                                    system_prefix_len=8, user_isl=4, osl=2))
+    w = SessionWorkload(vocab=97, seed=0, sessions=1, turns=2,
+                        system_prefix_len=8, user_isl=4, osl=2,
+                        think_time=0.5)
+    first = w.poll(0.0)
+    assert len(first) == 1
+    assert w.next_arrival() is None and not w.exhausted()
+    # completing turn 0 unlocks turn 1 at done + think
+    first[0].output = [3, 4]
+    first[0].done_t = 1.0
+    w.on_complete(first[0], 1.0)
+    assert w.next_arrival() == pytest.approx(1.5)
+    (nxt,) = w.poll(2.0)
+    assert nxt.turn == 1 and nxt.arrival_t == pytest.approx(1.5)
+
+
+def test_serve_until_stops_admitting_then_drains(params):
+    """``until`` caps admission (inclusive, even when the idle clock must
+    jump to reach it) and drains what was admitted."""
+    rec = Recorder(OpenLoopWorkload(Burst(3, at=1.0, spacing=1.0),
+                                    FixedShape(8, 2), vocab=97, seed=0))
+    cl = Cluster({"mixed": [mk(0, params)]})
+    m = cl.serve(rec, until=2.0, max_wall_s=300)
+    # arrivals at t=1.0 and t=2.0 (boundary) served; t=3.0 never admitted
+    assert m["completed"] == 2
+    assert [r.arrival_t for r in rec.emitted] == [1.0, 2.0]
+    assert all(r.done for r in rec.emitted)
+    assert not rec.exhausted()
+
+
+def test_serve_episode_evicts_stale_inflight(params):
+    """A request left in-flight by a max_wall-truncated episode must not
+    decode into (or complete against) the next episode."""
+    cl = Cluster({"mixed": [mk(0, params)]})
+    w1 = Recorder(OpenLoopWorkload(Burst(1), FixedShape(8, 2000), vocab=97,
+                                   seed=0))
+    cl.serve(w1, max_wall_s=1e-9)       # truncate mid-decode
+    assert w1.emitted and not w1.emitted[0].done
+    w2 = Recorder(OpenLoopWorkload(Burst(2), FixedShape(8, 3), vocab=97,
+                                   seed=1))
+    m = cl.serve(w2, max_wall_s=300)
+    assert m["completed"] == 2
+    assert not w1.emitted[0].done       # the stale request was dropped
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+def test_burst_and_spacing():
+    reqs = materialize(OpenLoopWorkload(Burst(5, at=2.0, spacing=0.1),
+                                        FixedShape(8, 2), vocab=97, seed=0))
+    assert [round(r.arrival_t, 6) for r in reqs] == [2.0, 2.1, 2.2, 2.3, 2.4]
+
+
+def test_piecewise_rate_silent_phase_and_repeat():
+    rng = np.random.default_rng(0)
+    p = PiecewiseRate([(1.0, 200.0), (1.0, 0.0)], repeat=True)
+    ts, t = [], 0.0
+    for _ in range(300):
+        t = p.next_after(rng, t)
+        ts.append(t)
+    assert all(int(x) % 2 == 0 for x in ts)     # arrivals only in on-phases
+    assert max(ts) > 2.0                        # repeated past one period
+    assert p.mean_rate() == pytest.approx(100.0)
+    # non-repeating variant ends after the schedule
+    p2 = PiecewiseRate([(0.5, 100.0)], repeat=False)
+    rng2 = np.random.default_rng(1)
+    t, n = 0.0, 0
+    while True:
+        t2 = p2.next_after(rng2, t)
+        if t2 is None:
+            break
+        assert t2 <= 0.5
+        t, n = t2, n + 1
+    assert n > 10
+
+
+def test_diurnal_rate_modulates_density():
+    rng = np.random.default_rng(2)
+    d = Diurnal(100.0, amplitude=0.9, period=2.0)   # peak at t=0.5, trough 1.5
+    ts, t = [], 0.0
+    for _ in range(2000):
+        t = d.next_after(rng, t)
+        ts.append(t % 2.0)
+    peak = sum(1 for x in ts if 0.25 <= x < 0.75)
+    trough = sum(1 for x in ts if 1.25 <= x < 1.75)
+    assert peak > 3 * trough
+
+
+def test_merged_arrivals_interleave():
+    rng = np.random.default_rng(3)
+    m = Merged([Burst(2, at=0.0), Burst(2, at=1.0), Poisson(1e-9)])
+    ts = [m.next_after(rng, 0.0) for _ in range(4)]
+    assert ts[:2] == [0.0, 0.0] and ts[2:] == [1.0, 1.0]
+    assert m.mean_rate() > 0
+
+
+# ---------------------------------------------------------------------------
+# Trace replay
+# ---------------------------------------------------------------------------
+
+def test_trace_roundtrip_preserves_stream(tmp_path):
+    src = materialize(OpenLoopWorkload(
+        Poisson(20.0), LognormalShape(32, 8), vocab=97, seed=9,
+        max_requests=12, tier=BATCH))
+    path = tmp_path / "trace.jsonl"
+    record_trace(src, path, with_prompts=True)
+    replay = materialize(TraceReplay(path, vocab=97))
+    assert _stream(replay) == _stream(src)
+    # without prompts, shape/timing survive and prompts are synthesized
+    record_trace(src, path)
+    replay2 = materialize(TraceReplay(path, vocab=97, seed=4))
+    assert [(r.arrival_t, r.isl, r.osl) for r in replay2] == \
+        [(r.arrival_t, r.isl, r.osl) for r in src]
+
+
+def test_trace_time_scale_compresses():
+    recs = [{"arrival_t": 1.0, "isl": 8, "osl": 2},
+            {"arrival_t": 3.0, "isl": 8, "osl": 2}]
+    fast = materialize(TraceReplay(recs, vocab=97, time_scale=0.5))
+    assert [r.arrival_t for r in fast] == [0.5, 1.5]
+
+
+# ---------------------------------------------------------------------------
+# Summaries feed the analytic sweeps
+# ---------------------------------------------------------------------------
+
+def test_session_summary_reuse_fraction():
+    w = SessionWorkload(vocab=97, seed=0, sessions=4, turns=3, families=2,
+                        system_prefix_len=48, user_isl=16, osl=8)
+    s = w.summary()
+    # turn lengths 64/88/112 -> mean 88; fresh tokens are only the 16/turn
+    assert s.isl == pytest.approx(88.0)
+    assert s.osl == pytest.approx(8.0)
+    assert s.reuse_fraction == pytest.approx(1 - 3 * 16 / (64 + 88 + 112))
+    assert s.effective_isl == pytest.approx(s.isl * (1 - s.reuse_fraction))
+
+
+def test_superpose_summary_mixes_marginals():
+    # rate-limited children: weights follow rate x horizon counts
+    a = OpenLoopWorkload(Poisson(30.0), FixedShape(100, 10), vocab=97,
+                         seed=0, horizon_s=10.0, max_requests=10_000)
+    b = OpenLoopWorkload(Poisson(10.0), FixedShape(20, 50), vocab=97,
+                         seed=1, horizon_s=10.0, max_requests=10_000)
+    s = Superpose([a, b]).summary()
+    assert s.rate == pytest.approx(40.0)
+    assert s.isl == pytest.approx((30 * 100 + 10 * 20) / 40)
+    assert s.osl == pytest.approx((30 * 10 + 10 * 50) / 40)
+    # count-limited children (bursts): weights follow burst sizes
+    big = OpenLoopWorkload(Burst(10), FixedShape(64, 6), vocab=97, seed=0)
+    small = OpenLoopWorkload(Burst(4), FixedShape(16, 6), vocab=97, seed=1)
+    s2 = Superpose([big, small]).summary()
+    assert s2.isl == pytest.approx((10 * 64 + 4 * 16) / 14)
+
+
+def test_workload_frontier_consumes_summary_and_reuse_helps():
+    """The analytic sweep runs off the workload's marginals; KV reuse can
+    only push the disagg frontier up (prefill compute shrinks, decode and
+    HBM residency unchanged)."""
+    s = WorkloadSummary(isl=4096, osl=512, rate=10.0, reuse_fraction=0.75)
+    f_reuse = workload_frontier(LLAMA31_70B, s, max_chips=16)
+    f_cold = workload_frontier(
+        LLAMA31_70B, WorkloadSummary(isl=4096, osl=512, rate=10.0),
+        max_chips=16)
+    assert f_reuse and f_cold
+    assert max(t for _, t in f_reuse) >= max(t for _, t in f_cold)
+    # the rate-matching entry point accepts the same summary object
+    pre = sweep_prefill(LLAMA31_70B, round(s.effective_isl), max_chips=16,
+                        mem_isl=round(s.isl))
+    dec = sweep_decode(LLAMA31_70B, round(s.isl + s.osl / 2), max_chips=16,
+                       max_ctx=round(s.isl + s.osl))
+    matched = dynamic_rate_match_for(pre, dec, s, ftl_cutoff=10.0,
+                                     ttl_targets=[0.05])
+    assert matched and matched[0].alpha > 0
+
+
+# ---------------------------------------------------------------------------
+# SLA tiers through the scheduler
+# ---------------------------------------------------------------------------
+
+def test_sla_tiers_drive_priority_scheduling(params):
+    """An interactive tier superposed on a batch backfill: the priority
+    scheduler admits tiered requests first (structural, timing-free)."""
+    backfill = OpenLoopWorkload(Burst(6, at=0.0), FixedShape(48, 4),
+                                vocab=97, seed=0, tier=BATCH)
+    urgent = OpenLoopWorkload(Burst(2, at=0.0), FixedShape(12, 4),
+                              vocab=97, seed=1, start_rid=100,
+                              tier=INTERACTIVE)
+    rec = Recorder(Superpose([backfill, urgent]))
+    cl = Cluster({"prefill": [mk(0, params, capacity=64)],
+                  "decode": [mk(1, params, slots=8, capacity=64)]},
+                 scheduler=PriorityScheduler())
+    m = cl.serve(rec, max_wall_s=600)
+    assert m["completed"] == 8
+    urg = [r for r in rec.emitted if r.priority == INTERACTIVE.priority]
+    bg = [r for r in rec.emitted if r.priority == BATCH.priority]
+    assert len(urg) == 2 and len(bg) == 6
+    assert max(r.prefill_start_t for r in urg) <= \
+        min(r.prefill_start_t for r in bg)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: multi-turn shared-prefix sessions reward KV locality
+# ---------------------------------------------------------------------------
+
+def test_prefix_affinity_beats_naive_on_sessions(params):
+    """The ISSUE's acceptance scenario: on a deterministic multi-turn
+    shared-prefix workload, PrefixAffinityScheduler + KVLocalityRouter
+    achieves strictly higher prefix-cache hit rate AND lower mean FTL
+    than FCFSScheduler + RoundRobinRouter."""
+    cfg = ModelConfig(name="chat-small", family="dense", num_layers=4,
+                      d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                      vocab_size=97, remat=False, logits_chunk=32,
+                      dtype="float32")
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    chunk, cap = 16, 448
+
+    def sessions(seed):
+        return SessionWorkload(vocab=97, seed=seed, sessions=6, turns=3,
+                               families=2, system_prefix_len=192,
+                               user_isl=48, osl=4, think_time=0.02)
+
+    def drive(scheduler, router, base):
+        pool = [Engine(base, cfg, p, slots=8, capacity=cap,
+                       chunk_size=chunk)]
+        cl = Cluster({"mixed": pool}, scheduler=scheduler, router=router)
+        # structural warm-up: same shapes, different seed -> jit compiles
+        # happen here, prompt content never collides with the measured pass
+        cl.serve(sessions(42), max_wall_s=600)
+        h0 = sum(e.prefix_cache.hit_tokens for e in pool)
+        rec = Recorder(sessions(0))
+        m = cl.serve(rec, max_wall_s=600)
+        hits = sum(e.prefix_cache.hit_tokens for e in pool) - h0
+        mean_ftl = float(np.mean([r.ftl for r in rec.emitted]))
+        return m, hits, mean_ftl, cl
+
+    m_a, hits_a, ftl_a, cl_a = drive(PrefixAffinityScheduler(chunk),
+                                     KVLocalityRouter(), 0)
+    m_n, hits_n, ftl_n, cl_n = drive(FCFSScheduler(), RoundRobinRouter(), 10)
+
+    assert m_a["completed"] == m_n["completed"] == 18
+    # strictly higher prefix-cache hit rate (naive never consults it)
+    assert hits_a > hits_n, (hits_a, hits_n)
+    assert hits_a >= 12 * 192        # every post-first turn reuses context
+    # and strictly lower mean first-token latency
+    assert ftl_a < ftl_n, (ftl_a, ftl_n)
+    # KV locality: single mixed engine -> decode stays local
+    assert cl_a.stats.transfers == 0
