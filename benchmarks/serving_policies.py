@@ -1,22 +1,102 @@
 """Scheduler/router policy comparison across workloads on the executable
-Cluster runtime.
+Cluster runtime — plus heterogeneous per-pool hardware.
 
 Runs each selected workload through several policy stacks on an identical
 engine fleet, prints one CSV row per (workload, policy) pair, and writes
 the full trajectory to ``BENCH_serving.json`` — the runtime analogue of
 the paper's point that policy, not pipeline, is the unit of
-experimentation, now with the *workload* as a first-class axis:
+experimentation, now with the *workload* and the *per-pool chip* as
+first-class axes:
 
   PYTHONPATH=src python benchmarks/serving_policies.py \
       --workload mixed-priority sessions burst --out BENCH_serving.json
 
+  PYTHONPATH=src python benchmarks/serving_policies.py \
+      --workload burst --prefill-chip v5p --decode-chip v5e
+
 Workloads: ``mixed-priority`` (batch backfill + interactive tier, open
 loop), ``sessions`` (closed-loop multi-turn shared-prefix conversations),
 ``burst`` (prefill-heavy burst at t=0).
+
+When the two chip flags differ, a heterogeneous-hardware section runs and
+``BENCH_hetero.json`` is emitted: analytic Pareto frontiers (homogeneous
+on each chip vs compute-rich-prefill x decode-chip, at a matched chip
+budget) plus a runtime comparison of the same split at a matched engine
+budget on a prefill-heavy burst. ``--smoke`` shrinks the sweeps for CI.
 """
 import argparse
 import json
 import sys
+
+
+def hetero_comparison(args, cfg, params, mk_engine):
+    """Homogeneous vs heterogeneous pools at matched budgets -> dict."""
+    from repro.core.frontiers import (default_ttl_targets,
+                                      disaggregated_frontier)
+    from repro.core.paper_models import LLAMA31_8B, LLAMA31_70B
+    from repro.core.pareto import area_under_frontier, frontier_at
+    from repro.serving.cluster import Cluster
+    from repro.workloads import Burst, FixedShape, OpenLoopWorkload
+
+    # -- analytic: equal total chip budget, prefill-heavy shape ------------
+    # smoke drops to the 8B model: a 70B needs >8 v5e chips just to hold
+    # its weights, so the tiny budget would yield empty frontiers
+    isl, osl = 8192, 256
+    model = LLAMA31_8B if args.smoke else LLAMA31_70B
+    max_chips = 8 if args.smoke else 16
+    ttls = default_ttl_targets(8 if args.smoke else 16)
+
+    def frontier(pre_chip, dec_chip):
+        return disaggregated_frontier(
+            model, isl, osl, max_chips=max_chips, ttl_targets=ttls,
+            hardware={"prefill": pre_chip, "decode": dec_chip})
+
+    f_het = frontier(args.prefill_chip, args.decode_chip)
+    f_homog = frontier(args.decode_chip, args.decode_chip)
+    f_homog_pre = frontier(args.prefill_chip, args.prefill_chip)
+    assert f_het and f_homog, "analytic sweep produced an empty frontier"
+    area = lambda f: area_under_frontier(f, 10, 300)   # noqa: E731
+    xs = [15.0, 50.0, 150.0]
+    analytic = {
+        "model": model.name, "isl": isl, "osl": osl,
+        "max_chips": max_chips,
+        "hetero": {"prefill": args.prefill_chip,
+                   "decode": args.decode_chip,
+                   "area": area(f_het),
+                   "frontier": f_het},
+        "homog_decode_chip": {"chip": args.decode_chip,
+                              "area": area(f_homog),
+                              "frontier": f_homog},
+        "homog_prefill_chip": {"chip": args.prefill_chip,
+                               "area": area(f_homog_pre),
+                               "frontier": f_homog_pre},
+        "frontier_at": {str(x): {"hetero": frontier_at(f_het, x),
+                                 "homog": frontier_at(f_homog, x)}
+                        for x in xs},
+        "hetero_ge_homog": all(frontier_at(f_het, x)
+                               >= frontier_at(f_homog, x) - 1e-9
+                               for x in xs),
+    }
+
+    # -- runtime: equal engine budget, prefill-heavy burst -----------------
+    def run(pre_chip, dec_chip):
+        pre = [mk_engine(0, pre_chip)]
+        dec = [mk_engine(10 + i, dec_chip) for i in range(2)]
+        cl = Cluster({"prefill": pre, "decode": dec})
+        n = 6 if args.smoke else 12
+        w = OpenLoopWorkload(Burst(n, at=0.0), FixedShape(96, 4),
+                             vocab=cfg.vocab_size, seed=2)
+        m = cl.serve(w, max_wall_s=600)
+        assert m["completed"] == n
+        return {"prefill_chip": pre_chip, "decode_chip": dec_chip,
+                "completed": int(m["completed"]),
+                "p50_ftl_s": m["p50_ftl_s"], "p99_ftl_s": m["p99_ftl_s"],
+                "tokens_per_s": m["tokens_per_s"],
+                "hardware": cl.pool_hardware()}
+
+    runtime = [run(args.decode_chip, args.decode_chip),
+               run(args.prefill_chip, args.decode_chip)]
+    return {"analytic": analytic, "runtime": runtime}
 
 
 def main(argv=None) -> None:
@@ -24,6 +104,7 @@ def main(argv=None) -> None:
     import jax
     import numpy as np
 
+    from repro.core.hardware import get_chip
     from repro.models import transformer as T
     from repro.models.config import ModelConfig
     from repro.serving.cluster import Cluster
@@ -43,6 +124,16 @@ def main(argv=None) -> None:
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="trajectory file (one record per workload x "
                     "policy); '-' disables")
+    ap.add_argument("--prefill-chip", choices=["v5e", "v5p"], default="v5e",
+                    help="hardware class of the prefill pool")
+    ap.add_argument("--decode-chip", choices=["v5e", "v5p"], default="v5e",
+                    help="hardware class of the decode pool")
+    ap.add_argument("--hetero-out", default="BENCH_hetero.json",
+                    help="heterogeneous-hardware comparison artifact "
+                    "(written when the chip flags differ); '-' disables")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweeps (CI): smaller chip budget, fewer "
+                    "TTL targets, shorter bursts")
     args = ap.parse_args(argv)
 
     cfg = ModelConfig(name="bench-tiny", family="dense", num_layers=2,
@@ -71,11 +162,13 @@ def main(argv=None) -> None:
                                     vocab=97, seed=2), 12
         raise ValueError(name)
 
+    def mk_engine(i, chip_name, chunk=CHUNK):
+        return Engine(i, cfg, params, slots=4, capacity=256,
+                      chunk_size=chunk, chip=get_chip(chip_name))
+
     def fleet():
-        pre = [Engine(i, cfg, params, slots=4, capacity=256,
-                      chunk_size=CHUNK) for i in range(1)]
-        dec = [Engine(10 + i, cfg, params, slots=4, capacity=256,
-                      chunk_size=CHUNK) for i in range(2)]
+        pre = [mk_engine(i, args.prefill_chip) for i in range(1)]
+        dec = [mk_engine(10 + i, args.decode_chip) for i in range(2)]
         return pre, dec
 
     configs = [
@@ -125,6 +218,21 @@ def main(argv=None) -> None:
             # (missing percentiles are already None, not NaN)
             json.dump(trajectory, f, indent=1, allow_nan=False)
         print(f"# wrote {len(trajectory)} records -> {args.out}")
+
+    if args.prefill_chip != args.decode_chip and args.hetero_out != "-":
+        hetero = hetero_comparison(args, cfg, params, mk_engine)
+        a = hetero["analytic"]
+        print(f"# hetero {args.prefill_chip}x{args.decode_chip} area="
+              f"{a['hetero']['area']:.1f} vs homog {args.decode_chip} "
+              f"area={a['homog_decode_chip']['area']:.1f} "
+              f"(hetero_ge_homog={a['hetero_ge_homog']})")
+        for row in hetero["runtime"]:
+            print(f"# runtime {row['prefill_chip']}x{row['decode_chip']}: "
+                  f"{row['tokens_per_s']:.1f} tok/s, "
+                  f"p99 ftl {row['p99_ftl_s']:.4f}s")
+        with open(args.hetero_out, "w") as f:
+            json.dump(hetero, f, indent=1, allow_nan=False)
+        print(f"# wrote hetero comparison -> {args.hetero_out}")
 
 
 if __name__ == "__main__":

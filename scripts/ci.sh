@@ -18,4 +18,29 @@ echo "== smoke: examples (tiny configs) =="
 python examples/quickstart.py
 python examples/multi_turn_sessions.py
 
+echo "== trace corpus goldens =="
+python -m pytest -q tests/test_trace_corpus.py
+
+echo "== hetero benchmark (smoke) =="
+rm -f BENCH_hetero.json
+python benchmarks/serving_policies.py --workload burst --smoke \
+    --prefill-chip v5p --decode-chip v5e --out -
+python - <<'PY'
+import json, sys
+try:
+    with open("BENCH_hetero.json") as f:
+        d = json.load(f)
+except FileNotFoundError:
+    sys.exit("BENCH_hetero.json missing: hetero benchmark did not emit it")
+a = d["analytic"]
+assert a["hetero"]["frontier"] and a["homog_decode_chip"]["frontier"], \
+    "empty frontier in BENCH_hetero.json"
+assert a["hetero_ge_homog"], \
+    "heterogeneous frontier fell below homogeneous at equal chip budget"
+assert len(d["runtime"]) == 2 and all(
+    r["completed"] > 0 for r in d["runtime"]), d["runtime"]
+print("BENCH_hetero.json OK: hetero area %.1f >= homog area %.1f"
+      % (a["hetero"]["area"], a["homog_decode_chip"]["area"]))
+PY
+
 echo "CI OK"

@@ -1,0 +1,108 @@
+"""Regenerate the checked-in trace regression corpus (tests/data/traces/).
+
+Four small production-like JSONL traces (ROADMAP: the ``record_trace``
+regression corpus), each written *with prompts* so replay token streams
+are fully pinned by the file — independent of the replay seed:
+
+  - burst.jsonl     prefill-heavy burst at t=0 (open loop)
+  - diurnal.jsonl   thinned diurnal arrivals, lognormal shapes (open loop)
+  - sessions.jsonl  multi-turn conversations recorded from a closed-loop
+                    serve (arrival times are the recorded virtual times;
+                    prompts embed the prior turns' outputs)
+  - tiers.jsonl     interactive SLA tier superposed on a batch backfill
+
+Also rewrites ``golden.json``: per-trace file hashes and summary marginals
+that ``tests/test_trace_corpus.py`` asserts against. Regenerating is a
+deliberate act — goldens move with it:
+
+  PYTHONPATH=src python scripts/gen_trace_corpus.py
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+from repro.models import transformer as T  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.serving.cluster import Cluster  # noqa: E402
+from repro.serving.engine import Engine  # noqa: E402
+from repro.workloads import (BATCH, INTERACTIVE, Burst, Diurnal,  # noqa: E402
+                             FixedShape, LognormalShape, OpenLoopWorkload,
+                             Recorder, SessionWorkload, Superpose,
+                             TraceReplay, materialize, record_trace)
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "tests" / "data" / "traces"
+VOCAB = 97
+
+CFG = ModelConfig(name="trace-tiny", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=VOCAB,
+                  remat=False, logits_chunk=32, dtype="float32")
+
+
+def burst_requests():
+    return materialize(OpenLoopWorkload(
+        Burst(10, at=0.0, spacing=0.05), FixedShape(24, 6),
+        vocab=VOCAB, seed=101))
+
+
+def diurnal_requests():
+    return materialize(OpenLoopWorkload(
+        Diurnal(8.0, amplitude=0.8, period=2.0), LognormalShape(16, 5),
+        vocab=VOCAB, seed=7, max_requests=10, horizon_s=60.0))
+
+
+def tiers_requests():
+    backfill = OpenLoopWorkload(Burst(8, at=0.0, spacing=0.02),
+                                FixedShape(48, 4), vocab=VOCAB, seed=0,
+                                tier=BATCH)
+    urgent = OpenLoopWorkload(Burst(4, at=0.01, spacing=0.05),
+                              FixedShape(12, 4), vocab=VOCAB, seed=1,
+                              start_rid=100, tier=INTERACTIVE)
+    return materialize(Superpose([backfill, urgent]))
+
+
+def session_requests():
+    """Closed-loop sessions must be *served* to exist; the recorded
+    arrival times are the serve's virtual times, frozen into the trace."""
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    w = Recorder(SessionWorkload(vocab=VOCAB, seed=3, sessions=3, turns=2,
+                                 families=2, system_prefix_len=16,
+                                 user_isl=8, osl=4, think_time=0.02))
+    cl = Cluster({"mixed": [Engine(0, CFG, params, slots=4, capacity=96)]})
+    m = cl.serve(w, max_wall_s=600)
+    assert m["completed"] == 6, m
+    return w.emitted
+
+
+def main():
+    OUT.mkdir(parents=True, exist_ok=True)
+    golden = {}
+    for name, gen in (("burst", burst_requests),
+                      ("diurnal", diurnal_requests),
+                      ("sessions", session_requests),
+                      ("tiers", tiers_requests)):
+        path = OUT / f"{name}.jsonl"
+        records = record_trace(gen(), path, with_prompts=True)
+        sha = hashlib.sha256(path.read_bytes()).hexdigest()
+        s = TraceReplay(path, vocab=VOCAB).summary()
+        golden[name] = {
+            "n_requests": len(records),
+            "sha256": sha,
+            "summary": {"isl": round(s.isl, 6), "osl": round(s.osl, 6),
+                        "rate": round(s.rate, 6)},
+        }
+        print(f"{name}: {len(records)} requests -> {path}")
+    with open(OUT / "golden.json", "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"goldens -> {OUT / 'golden.json'}")
+
+
+if __name__ == "__main__":
+    main()

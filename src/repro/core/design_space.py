@@ -31,6 +31,11 @@ class DesignPoint:
     batch: int
     perf: PhasePerf
     phase: str                      # "prefill" | "decode"
+    system: SystemConfig = DEFAULT_SYSTEM   # hardware this point was swept on
+
+    @property
+    def chip_name(self) -> str:
+        return self.system.chip.name
 
     @property
     def latency_s(self) -> float:
@@ -82,7 +87,7 @@ def sweep_prefill(model: PerfLLM, isl: int, sys_: SystemConfig = DEFAULT_SYSTEM,
             if not hbm_fits(model, m, b, mem_isl, sys_):
                 continue
             perf = prefill_perf(model, m, b, isl, sys_)
-            pts.append(DesignPoint(m, b, perf, "prefill"))
+            pts.append(DesignPoint(m, b, perf, "prefill", sys_))
     return pts
 
 
@@ -102,5 +107,5 @@ def sweep_decode(model: PerfLLM, kv_len: int,
             if not hbm_fits(model, m, b, max_ctx, sys_):
                 continue
             perf = decode_step_perf(model, m, b, kv_len, sys_)
-            pts.append(DesignPoint(m, b, perf, "decode"))
+            pts.append(DesignPoint(m, b, perf, "decode", sys_))
     return pts

@@ -10,7 +10,8 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.core.design_space import (DesignPoint, sweep_decode, sweep_prefill,
                                      _pow2)
-from repro.core.hardware import SystemConfig, DEFAULT_SYSTEM
+from repro.core.hardware import (DEFAULT_SYSTEM, HardwareLike, SystemConfig,
+                                 as_system)
 from repro.core.pareto import pareto_frontier
 from repro.core.perf_model import (Mapping, PerfLLM, decode_step_perf,
                                    hbm_fits, piggyback_step_perf,
@@ -32,23 +33,55 @@ def disaggregated_frontier(model: PerfLLM, isl: int, osl: int,
                            ftl_cutoff: float = FTL_CUTOFF_DEFAULT,
                            ttl_targets: Optional[Sequence[float]] = None,
                            max_chips: Optional[int] = None,
-                           reuse_fraction: float = 0.0
+                           reuse_fraction: float = 0.0,
+                           hardware: Optional[dict] = None
                            ) -> List[Point]:
     """``reuse_fraction`` models KV-cache reuse (multi-turn / shared-prefix
     workloads): prefill computes only the un-cached ``isl * (1 - reuse)``
     tokens, while HBM residency and decode context still span the full
-    ``isl + osl``."""
+    ``isl + osl``.
+
+    ``hardware`` makes the pools heterogeneous:
+    ``{"prefill": "v5p", "decode": "v5e"}`` (values are ``SystemConfig`` /
+    ``ChipConfig`` / registry names) sweeps each phase's design space on
+    its own chip; a missing key falls back to ``sys_``. Throughput stays
+    normalized per chip over *all* chips of the matched deployment, so
+    heterogeneous and homogeneous frontiers share one y-axis."""
     assert 0.0 <= reuse_fraction < 1.0, reuse_fraction
+    pre_sys, dec_sys = sys_, sys_
+    if hardware:
+        unknown = set(hardware) - {"prefill", "decode"}
+        assert not unknown, f"hardware keys must be prefill/decode: {unknown}"
+        pre_sys = as_system(hardware.get("prefill", sys_), base=sys_)
+        dec_sys = as_system(hardware.get("decode", sys_), base=sys_)
     isl_eff = max(1, round(isl * (1.0 - reuse_fraction)))
-    pre = sweep_prefill(model, isl_eff, sys_, max_chips=max_chips,
+    pre = sweep_prefill(model, isl_eff, pre_sys, max_chips=max_chips,
                         mem_isl=isl)
-    dec = sweep_decode(model, isl + osl // 2, sys_, max_chips=max_chips,
+    dec = sweep_decode(model, isl + osl // 2, dec_sys, max_chips=max_chips,
                        max_ctx=isl + osl)
     matched = dynamic_rate_match(pre, dec, isl=isl_eff, osl=osl,
                                  ftl_cutoff=ftl_cutoff,
                                  ttl_targets=list(ttl_targets or
                                                   default_ttl_targets()))
     pts = [(r.tps_per_user, r.overall_tput_per_chip) for r in matched]
+    return pareto_frontier(pts)
+
+
+def best_hardware_frontier(model: PerfLLM, isl: int, osl: int,
+                           options: Sequence[HardwareLike],
+                           sys_: SystemConfig = DEFAULT_SYSTEM,
+                           **kw) -> List[Point]:
+    """Pareto union over every per-pool chip assignment drawn from
+    ``options`` (all |options|^2 prefill x decode pairs, homogeneous pairs
+    included). By construction this frontier dominates-or-ties each
+    homogeneous frontier at the same chip budget — the analytic upper
+    bound of what heterogeneous pools can buy."""
+    pts: List[Point] = []
+    for pre_hw in options:
+        for dec_hw in options:
+            pts.extend(disaggregated_frontier(
+                model, isl, osl, sys_,
+                hardware={"prefill": pre_hw, "decode": dec_hw}, **kw))
     return pareto_frontier(pts)
 
 
@@ -62,7 +95,10 @@ def workload_frontier(model: PerfLLM, workload,
 
     ``mode``: ``"disagg"`` (reuse-aware, Fig 2 right) or ``"coloc"``
     (Fig 2 left; reuse ignored — the co-located perf model has no
-    prefix-cache term)."""
+    prefix-cache term). ``hardware={"prefill": ..., "decode": ...}``
+    passes through to ``disaggregated_frontier`` for heterogeneous pools;
+    for ``"coloc"`` it is dropped (one mixed pool runs one chip), so a
+    caller can sweep both modes with one kwargs dict."""
     summary = workload.summary() if hasattr(workload, "summary") else workload
     isl = max(1, round(summary.isl))
     osl = max(1, round(summary.osl))
@@ -71,6 +107,7 @@ def workload_frontier(model: PerfLLM, workload,
             model, isl, osl, sys_,
             reuse_fraction=summary.reuse_fraction, **kw)
     if mode == "coloc":
+        kw.pop("hardware", None)
         return colocated_frontier(model, isl, osl, sys_, **kw)
     raise ValueError(f"mode must be 'disagg' or 'coloc': {mode!r}")
 

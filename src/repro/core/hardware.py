@@ -2,10 +2,19 @@
 
 The paper targets Blackwell GPUs + NVLink domains; our deployment target is
 TPU v5e pods with ICI domains (DESIGN.md §2). All bandwidths are per chip.
+
+Hardware is a *per-pool* property, not a global constant: the prefill and
+decode pools of a disaggregated deployment may run different chips
+(compute-rich prefill, bandwidth-rich decode — see docs/hardware.md).
+Everything downstream therefore takes a ``SystemConfig`` per phase;
+``as_system`` coerces a ``ChipConfig`` or a registry name ("v5p") so call
+sites can stay terse.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+from typing import Dict, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +56,21 @@ TPU_V5P = ChipConfig(
 )
 
 
+CHIPS: Dict[str, ChipConfig] = {
+    "v5e": TPU_V5E,
+    "v5p": TPU_V5P,
+    TPU_V5E.name: TPU_V5E,
+    TPU_V5P.name: TPU_V5P,
+}
+
+
+def get_chip(name: str) -> ChipConfig:
+    try:
+        return CHIPS[name]
+    except KeyError:
+        raise KeyError(f"unknown chip {name!r}; known: {sorted(CHIPS)}")
+
+
 @dataclasses.dataclass(frozen=True)
 class SystemConfig:
     chip: ChipConfig = TPU_V5E
@@ -64,5 +88,40 @@ class SystemConfig:
     def with_domain(self, n: int) -> "SystemConfig":
         return dataclasses.replace(self, ici_domain=n)
 
+    def with_chip(self, chip: Union[ChipConfig, str]) -> "SystemConfig":
+        if isinstance(chip, str):
+            chip = get_chip(chip)
+        return dataclasses.replace(self, chip=chip)
+
 
 DEFAULT_SYSTEM = SystemConfig()
+TPU_V5P_SYSTEM = SystemConfig(chip=TPU_V5P)
+
+HardwareLike = Union[SystemConfig, ChipConfig, str]
+
+
+def as_system(hw: HardwareLike, base: SystemConfig = DEFAULT_SYSTEM
+              ) -> SystemConfig:
+    """Coerce a per-pool hardware spec into a full ``SystemConfig``.
+
+    Accepts a ``SystemConfig`` (returned as-is), a ``ChipConfig``, or a
+    registry name ("v5p"); the last two inherit domain size and modelled
+    efficiencies from ``base``."""
+    if isinstance(hw, SystemConfig):
+        return hw
+    if isinstance(hw, ChipConfig):
+        return dataclasses.replace(base, chip=hw)
+    if isinstance(hw, str):
+        return dataclasses.replace(base, chip=get_chip(hw))
+    raise TypeError(f"expected SystemConfig | ChipConfig | str, got {hw!r}")
+
+
+def relative_speed(chip: ChipConfig, reference: ChipConfig = TPU_V5E
+                   ) -> float:
+    """Napkin-grade relative serving speed of ``chip`` vs ``reference``:
+    the geometric mean of the compute and HBM-bandwidth speedups (prefill
+    is compute-bound, decode memory-bound; one engine does both over its
+    lifetime). Used by the executable simulator to scale measured step
+    wall-times onto a chip the host does not have."""
+    return math.sqrt((chip.flops_bf16 / reference.flops_bf16)
+                     * (chip.hbm_bw / reference.hbm_bw))

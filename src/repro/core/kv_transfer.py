@@ -10,7 +10,10 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.hardware import SystemConfig, DEFAULT_SYSTEM
+from typing import Optional
+
+from repro.core.hardware import (DEFAULT_SYSTEM, HardwareLike, SystemConfig,
+                                 as_system)
 from repro.core.perf_model import Mapping, PerfLLM, kv_shard_chips
 
 
@@ -31,19 +34,29 @@ def kv_transfer_requirement(model: PerfLLM, *, isl: int, osl: int,
                             prefill_mapping: Mapping,
                             decode_mapping: Mapping,
                             prefill_batch: int = 1, decode_batch: int = 1,
-                            sys_: SystemConfig = DEFAULT_SYSTEM
+                            sys_: SystemConfig = DEFAULT_SYSTEM,
+                            prefill_sys: Optional[HardwareLike] = None,
+                            decode_sys: Optional[HardwareLike] = None
                             ) -> TransferRequirement:
     """Eqs 1-2 with the sharding/duplication correction.
 
     Eq 1: BW_egress  = KV(ISL) * BS_p / (FTL * NumGPU_p^shard)
     Eq 2: BW_ingress = KV(ISL) * BS_d / (TTL * OSL * NumGPU_d^shard)
-    """
+
+    With heterogeneous pools (``prefill_sys`` / ``decode_sys`` override
+    ``sys_`` per side), the feasibility check uses the *min* of the two
+    pools' per-chip DCN bandwidths — the hop is only as fast as its
+    slower endpoint."""
     kv_req = model.kv_bytes_per_token() * isl
     n_pre = kv_shard_chips(model, prefill_mapping)
     n_dec = kv_shard_chips(model, decode_mapping)
     egress = kv_req * prefill_batch / (ftl * n_pre)
     ingress = kv_req * decode_batch / (ttl * max(osl, 1) * n_dec)
-    provisioned = sys_.chip.dcn_bw
+    pre_sys = as_system(prefill_sys, base=sys_) if prefill_sys is not None \
+        else sys_
+    dec_sys = as_system(decode_sys, base=sys_) if decode_sys is not None \
+        else sys_
+    provisioned = min(pre_sys.chip.dcn_bw, dec_sys.chip.dcn_bw)
     return TransferRequirement(
         egress_bw=egress, ingress_bw=ingress,
         kv_bytes_per_request=kv_req,
@@ -52,9 +65,16 @@ def kv_transfer_requirement(model: PerfLLM, *, isl: int, osl: int,
 
 def transfer_latency_overlapped(model: PerfLLM, isl: int, ftl: float,
                                 prefill_mapping: Mapping,
-                                sys_: SystemConfig = DEFAULT_SYSTEM) -> float:
+                                sys_: SystemConfig = DEFAULT_SYSTEM,
+                                decode_sys: Optional[HardwareLike] = None
+                                ) -> float:
     """Exposed (non-overlapped) transfer time under layer-by-layer push:
-    only the *last layer's* KV cannot overlap with compute."""
+    only the *last layer's* KV cannot overlap with compute. The push runs
+    at the slower endpoint's DCN bandwidth when the decode pool's hardware
+    differs (``decode_sys``)."""
     per_layer = model.kv_bytes_per_token() * isl / model.num_layers
     n_pre = kv_shard_chips(model, prefill_mapping)
-    return per_layer / (n_pre * sys_.chip.dcn_bw)
+    bw = sys_.chip.dcn_bw
+    if decode_sys is not None:
+        bw = min(bw, as_system(decode_sys, base=sys_).chip.dcn_bw)
+    return per_layer / (n_pre * bw)

@@ -13,6 +13,13 @@ stated *intent* — "find the right balance between the throughput of prefill
 and decode phases" — i.e. the instance ratio satisfying
     i_pre * G_pre * pre_tput == i_dec * G_dec * dec_req_tput,
 rounded to a small rational with the same tolerance parameter.
+
+The solve is hardware-heterogeneous: each ``DesignPoint`` carries the
+``SystemConfig`` it was swept on, so the prefill pool can run a different
+chip than the decode pool (compute-rich prefill x bandwidth-rich decode).
+``dynamic_rate_match(model=..., prefill_sys=..., decode_sys=...)``
+enumerates each phase's design space on its own hardware; per-pool chip
+counts come out of the same integer solve.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ from fractions import Fraction
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.design_space import DesignPoint
+from repro.core.hardware import HardwareLike, as_system
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +41,7 @@ class RateMatchedPoint:
     overall_tput_per_chip: float    # tokens/s/chip over ALL chips (Table 1)
     tps_per_user: float             # interactivity = 1/TTL
     ftl_s: float
+    osl: int = 0                    # output length the solve balanced for
 
     @property
     def total_chips(self) -> int:
@@ -41,6 +50,37 @@ class RateMatchedPoint:
     @property
     def ctx_gen_ratio(self) -> float:
         return self.num_prefill_chips / max(self.num_decode_chips, 1)
+
+    @property
+    def prefill_chip(self) -> str:
+        return self.prefill.chip_name
+
+    @property
+    def decode_chip(self) -> str:
+        return self.decode.chip_name
+
+    @property
+    def heterogeneous(self) -> bool:
+        return self.prefill_chip != self.decode_chip
+
+    def pool_rates(self) -> Tuple[float, float]:
+        """(prefill, decode) balanced request rates over the sized pools."""
+        pre_tput = self.prefill.batch / (self.prefill.perf.latency_s
+                                         * self.prefill.mapping.chips)
+        dec_req = (self.decode.batch / (self.decode.perf.latency_s
+                                        * self.decode.mapping.chips)
+                   / max(self.osl - 1, 1))
+        return pre_tput * self.num_prefill_chips, \
+            dec_req * self.num_decode_chips
+
+    @property
+    def balance_residual(self) -> float:
+        """Relative imbalance of the integer solve: 0 when
+        i_pre*G_pre*pre_tput == i_dec*G_dec*dec_req_tput exactly; bounded
+        by the solver tolerance whenever alpha was representable within
+        ``max_denominator``."""
+        a, b = self.pool_rates()
+        return abs(a - b) / max(a, b)
 
 
 def prefill_config_selection(points: Sequence[DesignPoint], ftl_cutoff: float
@@ -88,7 +128,7 @@ def rate_match(prefill_pt: DesignPoint, decode_pts: Sequence[DesignPoint],
             num_prefill_chips=n_pre, num_decode_chips=n_dec,
             overall_tput_per_chip=overall,
             tps_per_user=1.0 / ttl,
-            ftl_s=prefill_pt.perf.latency_s))
+            ftl_s=prefill_pt.perf.latency_s, osl=osl))
     return out
 
 
@@ -151,18 +191,54 @@ def rate_match_fixed_ratio(prefill_pt: DesignPoint,
             num_decode_chips=d.mapping.chips,
             overall_tput_per_chip=overall,
             tps_per_user=1.0 / ttl,
-            ftl_s=prefill_pt.perf.latency_s))
+            ftl_s=prefill_pt.perf.latency_s, osl=osl))
     return out
 
 
-def dynamic_rate_match(prefill_pts: Sequence[DesignPoint],
-                       decode_pts: Sequence[DesignPoint], *,
+def dynamic_rate_match(prefill_pts: Optional[Sequence[DesignPoint]] = None,
+                       decode_pts: Optional[Sequence[DesignPoint]] = None, *,
                        isl: int, osl: int, ftl_cutoff: float,
                        ttl_targets: Sequence[float],
-                       tolerance: float = 0.03
+                       tolerance: float = 0.03,
+                       model=None,
+                       prefill_sys: Optional[HardwareLike] = None,
+                       decode_sys: Optional[HardwareLike] = None,
+                       max_chips: Optional[int] = None,
+                       mem_isl: Optional[int] = None
                        ) -> List[RateMatchedPoint]:
     """Full §3.2 pipeline: Alg 1 under the FTL cutoff, then Alg 2 for every
-    TTL target — the frontier generator behind Figs 1/6/7/8/10/11."""
+    TTL target — the frontier generator behind Figs 1/6/7/8/10/11.
+
+    Two call styles:
+
+    - pre-swept: pass ``prefill_pts`` / ``decode_pts`` (possibly built on
+      *different* ``SystemConfig``s — each ``DesignPoint`` carries its own
+      hardware, and the balance solve never assumes they match);
+    - per-pool hardware: pass ``model`` plus ``prefill_sys`` / ``decode_sys``
+      (``SystemConfig``, ``ChipConfig``, or a registry name like "v5p") and
+      each phase's design space is enumerated on its own chip — e.g. TPU
+      v5p prefill x v5e decode. ``mem_isl`` (>= isl) sizes the prefill HBM
+      check under KV reuse, mirroring ``sweep_prefill``.
+    """
+    if prefill_pts is None or decode_pts is None:
+        from repro.core.design_space import sweep_decode, sweep_prefill
+        from repro.core.hardware import DEFAULT_SYSTEM
+        if model is None:
+            raise ValueError("need `model` to sweep design spaces when "
+                             "prefill_pts/decode_pts are not given")
+        fallback = (prefill_sys if prefill_sys is not None else
+                    decode_sys if decode_sys is not None else DEFAULT_SYSTEM)
+        if prefill_pts is None:
+            pre_sys = as_system(prefill_sys if prefill_sys is not None
+                                else fallback)
+            prefill_pts = sweep_prefill(model, isl, pre_sys,
+                                        max_chips=max_chips, mem_isl=mem_isl)
+        if decode_pts is None:
+            dec_sys = as_system(decode_sys if decode_sys is not None
+                                else fallback)
+            decode_pts = sweep_decode(
+                model, (mem_isl or isl) + osl // 2, dec_sys,
+                max_chips=max_chips, max_ctx=(mem_isl or isl) + osl)
     best_pre = prefill_config_selection(prefill_pts, ftl_cutoff)
     if best_pre is None:
         return []
@@ -176,21 +252,31 @@ def dynamic_rate_match(prefill_pts: Sequence[DesignPoint],
     return out
 
 
-def dynamic_rate_match_for(prefill_pts: Sequence[DesignPoint],
-                           decode_pts: Sequence[DesignPoint], summary, *,
+def dynamic_rate_match_for(prefill_pts: Optional[Sequence[DesignPoint]],
+                           decode_pts: Optional[Sequence[DesignPoint]],
+                           summary, *,
                            ftl_cutoff: float,
                            ttl_targets: Sequence[float],
-                           tolerance: float = 0.03
-                           ) -> List[RateMatchedPoint]:
+                           tolerance: float = 0.03,
+                           **hardware) -> List[RateMatchedPoint]:
     """Rate matching driven by a scenario's marginals: ``summary`` is any
-    object with ``effective_isl`` / ``osl`` (``workloads.WorkloadSummary``
-    duck-typed, so ``core`` stays import-independent of the workload
-    layer). KV reuse enters through ``effective_isl``: the prefill sweep
-    fed in should have been built at that token count (``design_space.
-    sweep_prefill(..., mem_isl=full_isl)``)."""
+    object with ``isl`` / ``effective_isl`` / ``osl``
+    (``workloads.WorkloadSummary`` duck-typed, so ``core`` stays
+    import-independent of the workload layer). KV reuse enters through
+    ``effective_isl``: the prefill sweep fed in should have been built at
+    that token count (``design_space.sweep_prefill(..., mem_isl=
+    full_isl)``). Pass ``prefill_pts=decode_pts=None`` plus ``model`` and
+    per-pool ``prefill_sys`` / ``decode_sys`` keywords to sweep each phase
+    on its own hardware."""
+    full_isl = max(1, round(getattr(summary, "isl", summary.effective_isl)))
+    # mem_isl sizes HBM residency for *both* auto-swept phases (prefill
+    # capacity check and decode KV context span the full isl, not the
+    # reuse-reduced effective_isl)
+    auto_sweep = prefill_pts is None or decode_pts is None
     return dynamic_rate_match(
         prefill_pts, decode_pts,
         isl=max(1, round(summary.effective_isl)),
         osl=max(1, round(summary.osl)),
         ftl_cutoff=ftl_cutoff, ttl_targets=ttl_targets,
-        tolerance=tolerance)
+        tolerance=tolerance,
+        **dict({"mem_isl": full_isl} if auto_sweep else {}, **hardware))

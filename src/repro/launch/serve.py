@@ -21,6 +21,7 @@ import sys
 import jax
 
 from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.hardware import get_chip
 from repro.models import transformer as T
 from repro.serving.cluster import Cluster
 from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
@@ -98,6 +99,11 @@ def main(argv=None):
                     help="prefill:decode ratio for --rate-matcher static")
     ap.add_argument("--prefill-engines", type=int, default=1)
     ap.add_argument("--decode-engines", type=int, default=2)
+    ap.add_argument("--prefill-chip", choices=["v5e", "v5p"], default="v5e",
+                    help="hardware class of the prefill pool (virtual step "
+                    "times scale by the chip's relative speed)")
+    ap.add_argument("--decode-chip", choices=["v5e", "v5p"], default="v5e",
+                    help="hardware class of the decode pool")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--isl", type=int, default=48)
@@ -121,9 +127,9 @@ def main(argv=None):
     chunk = (args.piggyback_chunk
              if args.scheduler == "prefix-affinity" else 0)
 
-    def mk(i):
+    def mk(i, chip_name="v5e"):
         return Engine(i, cfg, params, slots=args.slots, capacity=capacity,
-                      chunk_size=chunk)
+                      chunk_size=chunk, chip=get_chip(chip_name))
 
     scheduler = SCHEDULERS[args.scheduler](chunk)
     sched_name = args.scheduler
@@ -137,14 +143,17 @@ def main(argv=None):
     if args.mode == "disagg":
         router = ROUTERS[args.router or "round-robin"]()
         cluster = Cluster(
-            {"prefill": [mk(i) for i in range(args.prefill_engines)],
-             "decode": [mk(100 + i) for i in range(args.decode_engines)]},
+            {"prefill": [mk(i, args.prefill_chip)
+                         for i in range(args.prefill_engines)],
+             "decode": [mk(100 + i, args.decode_chip)
+                        for i in range(args.decode_engines)]},
             scheduler=scheduler, router=router, rate_matcher=rate_matcher)
         metrics = cluster.serve(work)
         extra = {"transfers": cluster.stats.transfers,
                  "transferred_MB": cluster.stats.transferred_bytes / 2**20,
                  "prefill_pool": len(cluster.prefill_pool),
-                 "decode_pool": len(cluster.decode_pool)}
+                 "decode_pool": len(cluster.decode_pool),
+                 "hardware": cluster.pool_hardware()}
         if rate_matcher is not None:
             extra["rate_matcher_moves"] = rate_matcher.moves
         router_name = args.router or "round-robin"
@@ -159,13 +168,19 @@ def main(argv=None):
                   file=sys.stderr)
         router_name = args.router or "kv-locality"
         rm_name = "none"
+        if args.decode_chip != args.prefill_chip:
+            print("note: coloc mode runs one mixed pool; using "
+                  f"--prefill-chip {args.prefill_chip} for every engine",
+                  file=sys.stderr)
         router = ROUTERS[router_name]()
         cluster = Cluster(
-            {"mixed": [mk(i) for i in range(args.prefill_engines
-                                            + args.decode_engines)]},
+            {"mixed": [mk(i, args.prefill_chip)
+                       for i in range(args.prefill_engines
+                                      + args.decode_engines)]},
             scheduler=scheduler, router=router, rate_matcher=None)
         metrics = cluster.serve(work)
-        extra = {"transfers": cluster.stats.transfers}
+        extra = {"transfers": cluster.stats.transfers,
+                 "hardware": cluster.pool_hardware()}
 
     print(json.dumps({"arch": cfg.name, "mode": args.mode,
                       "workload": ("trace" if args.trace else args.workload),

@@ -111,6 +111,17 @@ class Cluster:
         requests sit at the front)."""
         return [r for r in self.queue if r.arrival_t <= self.now]
 
+    def pool_hardware(self) -> Dict[str, Dict[str, int]]:
+        """Per-role chip-class census (heterogeneous-pool telemetry), e.g.
+        ``{"prefill": {"tpu-v5p": 1}, "decode": {"tpu-v5e": 2}}``."""
+        out: Dict[str, Dict[str, int]] = {}
+        for role, engines in self.pools.items():
+            census: Dict[str, int] = {}
+            for e in engines:
+                census[e.hardware] = census.get(e.hardware, 0) + 1
+            out[role] = census
+        return out
+
     # -- mutation hooks shared with RateMatcher policies --------------------
 
     def requeue_inflight(self, eng: Engine):

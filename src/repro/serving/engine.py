@@ -11,6 +11,16 @@ inserted into free slots as others complete (IFB). KV handoff from a prefill
 engine is ``insert_kv`` — a jit'd scatter of the prefill cache into the slot
 (in-process stand-in for the ICI/DCN transfer; the paper's Eq 1-2 bandwidth
 analysis of this hop lives in core/kv_transfer.py).
+
+Hardware is a per-engine property: an ``Engine`` built with a
+``core.hardware.ChipConfig`` scales its measured step wall-times by the
+chip's relative speed (``hardware.relative_speed``), so pools of different
+chips — compute-rich prefill, bandwidth-rich decode — coexist in one
+``Cluster`` and the virtual clock reflects the modelled hardware, not the
+host. ``hardware`` names the chip class (straggler detection groups by it)
+and ``capacity_weight`` is the engine's serving capacity in
+reference-chip-equivalents (elastic rate matching weighs pools by it
+instead of counting heads).
 """
 from __future__ import annotations
 
@@ -22,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.hardware import ChipConfig, relative_speed
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
@@ -99,7 +110,8 @@ class Engine:
 
     def __init__(self, engine_id: int, cfg: ModelConfig, params,
                  *, slots: int = 8, capacity: int = 256,
-                 chunk_size: int = 0):
+                 chunk_size: int = 0, chip: Optional[ChipConfig] = None,
+                 speed_factor: Optional[float] = None):
         self.engine_id = engine_id
         self.cfg = cfg
         self.params = params
@@ -110,6 +122,15 @@ class Engine:
         self.clock = 0.0                       # engine-local clock (s)
         self.step_times: List[float] = []
         self._slow_factor = 1.0                # straggler injection (tests)
+        # hardware class: measured wall-times scale by 1/relative_speed so
+        # a v5p engine's virtual steps are ~2.8x shorter than a v5e's
+        self.chip = chip
+        self.hardware = chip.name if chip is not None else "uniform"
+        if speed_factor is not None:
+            self.speed_factor = speed_factor
+        else:
+            self.speed_factor = (1.0 / relative_speed(chip)
+                                 if chip is not None else 1.0)
 
         self._prefill = jax.jit(
             lambda p, i: T.prefill_full(p, cfg, i, capacity=capacity))
@@ -133,8 +154,15 @@ class Engine:
     def slow_down(self, factor: float):
         self._slow_factor = factor
 
+    @property
+    def capacity_weight(self) -> float:
+        """Serving capacity in reference-chip (v5e) equivalents — what the
+        elastic rate matcher sums instead of counting engine heads."""
+        return 1.0 / self.speed_factor
+
     def _tick(self, t0: float):
-        dt = (time.perf_counter() - t0) * self._slow_factor
+        dt = ((time.perf_counter() - t0) * self.speed_factor
+              * self._slow_factor)
         self.clock += dt
         self.step_times.append(dt)
         return dt

@@ -3,9 +3,13 @@ import math
 
 import pytest
 
+import dataclasses
+
 from repro.core.design_space import sweep_decode, sweep_prefill
-from repro.core.frontiers import colocated_frontier, disaggregated_frontier
-from repro.core.hardware import DEFAULT_SYSTEM, TPU_V5E
+from repro.core.frontiers import (best_hardware_frontier, colocated_frontier,
+                                  disaggregated_frontier)
+from repro.core.hardware import (DEFAULT_SYSTEM, TPU_V5E, TPU_V5P, as_system,
+                                 get_chip, relative_speed)
 from repro.core.kv_transfer import kv_transfer_requirement
 from repro.core.paper_models import (DEEPSEEK_R1, LLAMA31_8B, LLAMA31_70B,
                                      LLAMA31_405B, perf_llm_from_config)
@@ -141,6 +145,89 @@ def test_pareto_frontier_properties():
     assert xs == sorted(xs)
     assert ys == sorted(ys, reverse=True)
     assert (2, 6) in f and (3, 1) in f and (2, 4) not in f
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-pool hardware
+# ---------------------------------------------------------------------------
+
+def test_as_system_coercion():
+    assert as_system("v5p").chip.name == "tpu-v5p"
+    assert as_system(TPU_V5E).chip is TPU_V5E
+    sys_ = as_system("v5e")
+    assert as_system(sys_) is sys_
+    assert get_chip("v5p") is TPU_V5P
+    assert relative_speed(TPU_V5E) == pytest.approx(1.0)
+    assert relative_speed(TPU_V5P) > 2.0        # compute- and bw-richer
+    with pytest.raises(KeyError):
+        as_system("h100")
+    with pytest.raises(TypeError):
+        as_system(42)
+
+
+def test_hetero_rate_match_v5p_prefill_v5e_decode():
+    """Acceptance: distinct SystemConfigs per pool produce a valid matched
+    point whose balance residual is within solver tolerance, with each
+    phase's design space enumerated on its own chip."""
+    tol = 0.03
+    matched = dynamic_rate_match(
+        model=LLAMA31_8B, prefill_sys=TPU_V5P, decode_sys=TPU_V5E,
+        isl=8192, osl=512, ftl_cutoff=10.0,
+        ttl_targets=[0.02, 0.05, 0.2], tolerance=tol, max_chips=16)
+    assert matched
+    for r in matched:
+        assert r.heterogeneous
+        assert r.prefill_chip == "tpu-v5p" and r.decode_chip == "tpu-v5e"
+        assert r.prefill.system.chip is TPU_V5P
+        assert r.decode.system.chip is TPU_V5E
+        assert r.num_prefill_chips > 0 and r.num_decode_chips > 0
+        assert r.num_prefill_chips % r.prefill.mapping.chips == 0
+        assert r.num_decode_chips % r.decode.mapping.chips == 0
+        assert r.balance_residual <= tol + 1e-9, \
+            (r.alpha, r.balance_residual)
+        assert r.overall_tput_per_chip > 0
+
+
+def test_hetero_frontier_beats_homog_on_prefill_heavy():
+    """Compute-rich prefill chips lift the frontier of a prefill-heavy
+    workload at an equal total chip budget (normalized per chip)."""
+    kw = dict(max_chips=16, ttl_targets=[0.02, 0.05, 0.2])
+    f_het = disaggregated_frontier(
+        LLAMA31_8B, 8192, 256,
+        hardware={"prefill": "v5p", "decode": "v5e"}, **kw)
+    f_homog = disaggregated_frontier(LLAMA31_8B, 8192, 256, **kw)
+    assert f_het and f_homog
+    a_het = area_under_frontier(f_het, 10, 300)
+    a_homog = area_under_frontier(f_homog, 10, 300)
+    assert a_het >= a_homog, (a_het, a_homog)
+    # and the union-over-assignments frontier dominates both by construction
+    f_best = best_hardware_frontier(LLAMA31_8B, 8192, 256,
+                                    ["v5e", "v5p"], **kw)
+    for f in (f_het, f_homog):
+        for x, y in f:
+            assert frontier_at(f_best, x) >= y - 1e-9
+
+
+def test_kv_transfer_uses_min_pool_dcn_bandwidth():
+    """The hop runs at the slower endpoint: a decode pool whose chips have
+    half the DCN bandwidth halves the provisioned budget."""
+    slow_dcn = dataclasses.replace(TPU_V5E, name="slow-dcn",
+                                   dcn_bw=TPU_V5E.dcn_bw / 2)
+    kw = dict(isl=8192, osl=512, ftl=2.0, ttl=0.001,
+              prefill_mapping=Mapping(chips=8, tp=8),
+              decode_mapping=Mapping(chips=8, tp=8),
+              prefill_batch=1, decode_batch=70)
+    base = kv_transfer_requirement(LLAMA31_8B, **kw)
+    het = kv_transfer_requirement(LLAMA31_8B, prefill_sys=TPU_V5P,
+                                  decode_sys=slow_dcn, **kw)
+    # same Eq 1-2 bandwidth *requirements* either way...
+    assert het.egress_bw == base.egress_bw
+    assert het.ingress_bw == base.ingress_bw
+    # ...but feasibility is judged against min(pool DCN bw): craft a
+    # requirement that fits v5e's full budget yet not half of it
+    need = base.max_bw
+    assert TPU_V5E.dcn_bw / 2 < need <= TPU_V5E.dcn_bw
+    assert base.feasible and not het.feasible
 
 
 def test_headline_finding_prefill_heavy_and_size():

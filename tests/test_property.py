@@ -1,4 +1,5 @@
 """Hypothesis property tests on system invariants."""
+import dataclasses
 import math
 
 import jax
@@ -11,8 +12,11 @@ pytest.importorskip(
     "suite must still collect cleanly without it")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core.frontiers import (best_hardware_frontier,
+                                  disaggregated_frontier)
+from repro.core.hardware import TPU_V5E
 from repro.core.pareto import frontier_at, pareto_frontier
-from repro.core.rate_matching import _round_fraction
+from repro.core.rate_matching import _round_fraction, dynamic_rate_match
 from repro.core.perf_model import Mapping, PerfLLM, decode_step_perf
 from repro.models.config import MoEConfig
 from repro.models.moe import _local_moe, expert_capacity
@@ -117,6 +121,81 @@ def test_decode_step_time_monotone_in_batch_and_context(batch, kv):
     t3 = decode_step_perf(m, mp, batch, kv + 512).latency_s
     assert t2 >= t1 - 1e-12
     assert t3 >= t1 - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-pool hardware: the alpha solve and frontier dominance
+# ---------------------------------------------------------------------------
+
+HETERO_MODEL = PerfLLM(name="hm", num_layers=4, d_model=256, num_heads=8,
+                       num_kv_heads=8, d_ff=1024, vocab_size=1000)
+
+
+def _scaled_chip(name: str, flops_x: float, bw_x: float):
+    """A synthetic chip: TPU v5e with compute / HBM bandwidth scaled —
+    the random 'multi-vendor' silicon the hetero solve must balance."""
+    return dataclasses.replace(
+        TPU_V5E, name=name,
+        flops_bf16=TPU_V5E.flops_bf16 * flops_x,
+        flops_int8=TPU_V5E.flops_int8 * flops_x,
+        hbm_bw=TPU_V5E.hbm_bw * bw_x)
+
+
+CHIP_SCALE = st.floats(0.25, 4.0)
+
+
+@given(CHIP_SCALE, CHIP_SCALE, CHIP_SCALE, CHIP_SCALE)
+@settings(max_examples=20, deadline=None)
+def test_hetero_rate_match_balances_random_chip_pairs(pf, pb, df, db):
+    """For arbitrary (compute, bandwidth)-scaled chip pairs, the
+    heterogeneous integer solve must produce positive per-pool chip counts
+    that are whole instances, and — whenever alpha was representable
+    within the limit_denominator tolerance — a balance residual within
+    that tolerance."""
+    tol = 0.03
+    matched = dynamic_rate_match(
+        model=HETERO_MODEL,
+        prefill_sys=_scaled_chip("pre-sim", pf, pb),
+        decode_sys=_scaled_chip("dec-sim", df, db),
+        isl=512, osl=64, ftl_cutoff=10.0,
+        ttl_targets=[0.005, 0.02, 0.1, 1.0],
+        tolerance=tol, max_chips=4)
+    assert matched, "a tiny dense model must always rate-match"
+    for r in matched:
+        assert r.num_prefill_chips > 0 and r.num_decode_chips > 0
+        assert r.num_prefill_chips % r.prefill.mapping.chips == 0
+        assert r.num_decode_chips % r.decode.mapping.chips == 0
+        assert r.prefill_chip == "pre-sim" and r.decode_chip == "dec-sim"
+        pre_rate, dec_rate = r.pool_rates()
+        assert pre_rate > 0 and dec_rate > 0
+        # the true (real-valued) instance ratio the solve rounded
+        G_pre, G_dec = r.prefill.mapping.chips, r.decode.mapping.chips
+        pre_inst = r.prefill.batch / (r.prefill.perf.latency_s * G_pre)
+        dec_inst = (r.decode.batch / (r.decode.perf.latency_s * G_dec)
+                    / max(r.osl - 1, 1))
+        true_ratio = (G_dec * dec_inst) / (G_pre * pre_inst)
+        # whenever alpha was representable within tolerance (not clamped
+        # at the rational boundary), the sized pools balance within it
+        if abs(float(r.alpha) - true_ratio) / true_ratio <= tol:
+            assert r.balance_residual <= tol + 1e-9, (r.alpha, true_ratio)
+
+
+@given(CHIP_SCALE, CHIP_SCALE)
+@settings(max_examples=6, deadline=None)
+def test_hetero_frontier_dominates_homogeneous_at_equal_budget(fx, bx):
+    """The per-phase-best hardware frontier (union over all chip
+    assignments at the same chip budget) dominates-or-ties every
+    homogeneous frontier."""
+    other = _scaled_chip("other-sim", fx, bx)
+    kw = dict(max_chips=4, ttl_targets=[0.005, 0.02, 0.1, 0.5])
+    f_best = best_hardware_frontier(HETERO_MODEL, 2048, 128,
+                                    [TPU_V5E, other], **kw)
+    for chip in (TPU_V5E, other):
+        f_homog = disaggregated_frontier(
+            HETERO_MODEL, 2048, 128,
+            hardware={"prefill": chip, "decode": chip}, **kw)
+        for x, y in f_homog:
+            assert frontier_at(f_best, x) >= y - 1e-9, (chip.name, x, y)
 
 
 @given(st.integers(0, 2**31 - 1))

@@ -1,11 +1,14 @@
 """Serving runtime: disagg correctness, IFB, fault tolerance, elasticity,
-and the policy seams of the Cluster API (schedulers / routers / rate
-matchers)."""
+heterogeneous per-pool hardware, and the policy seams of the Cluster API
+(schedulers / routers / rate matchers)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.hardware import TPU_V5E, TPU_V5P, relative_speed
 from repro.core.rate_matching import split_pool
 from repro.core.traffic import TrafficPattern
 from repro.models import transformer as T
@@ -392,6 +395,175 @@ def test_split_pool_bridges_alpha_to_pool_sizes():
     assert split_pool(8, 1.0) == (4, 4)
     assert split_pool(4, 100.0) == (3, 1)       # always >=1 decode engine
     assert split_pool(2, 1e-6) == (1, 1)        # always >=1 prefill engine
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous pools: hardware classes, weighted capacity, mixed elasticity
+# ---------------------------------------------------------------------------
+
+# a synthetic chip 8x slower than v5e on both axes: relative_speed = 1/8,
+# i.e. its engines' virtual step times stretch 8x — a whole hardware class
+# that is slow *by design*, not a straggler
+SLOW_CHIP = dataclasses.replace(TPU_V5E, name="sim-slow",
+                                flops_bf16=TPU_V5E.flops_bf16 / 8,
+                                flops_int8=TPU_V5E.flops_int8 / 8,
+                                hbm_bw=TPU_V5E.hbm_bw / 8)
+
+
+def test_engine_hardware_class_and_capacity_weight(params):
+    e_plain = mk(0, params)
+    e_v5p = Engine(1, CFG, params, slots=4, capacity=48, chip=TPU_V5P)
+    e_slow = Engine(2, CFG, params, slots=4, capacity=48, chip=SLOW_CHIP)
+    assert e_plain.hardware == "uniform" and e_plain.capacity_weight == 1.0
+    assert e_v5p.hardware == "tpu-v5p"
+    assert e_v5p.capacity_weight == pytest.approx(relative_speed(TPU_V5P))
+    assert e_v5p.capacity_weight > 2.0
+    assert e_slow.capacity_weight == pytest.approx(0.125)
+    from repro.serving.elastic import pool_capacity
+    e_dead = Engine(3, CFG, params, slots=4, capacity=48, chip=TPU_V5P)
+    e_dead.fail()
+    assert pool_capacity([e_plain, e_v5p, e_dead]) == pytest.approx(
+        1.0 + relative_speed(TPU_V5P))
+
+
+def test_hetero_chip_scales_virtual_step_times(params):
+    """The same measured step advances a v5p-class engine's virtual clock
+    ~2.8x less than a v5e-class one. Driven through the ``_tick`` seam
+    with a fixed 10ms elapsed time so the check is deterministic (the
+    residual perf_counter delta between the two calls is microseconds)."""
+    import time
+    e_v5e = Engine(0, CFG, params, slots=2, capacity=48, chip=TPU_V5E)
+    e_v5p = Engine(1, CFG, params, slots=2, capacity=48, chip=TPU_V5P)
+    for e in (e_v5e, e_v5p):
+        e._tick(time.perf_counter() - 0.010)    # a simulated 10ms step
+    ratio = e_v5e.step_times[0] / e_v5p.step_times[0]
+    assert ratio == pytest.approx(relative_speed(TPU_V5P), rel=0.05)
+    assert e_v5p.clock < e_v5e.clock
+    # straggler injection composes on top of the hardware scale
+    e_v5p.slow_down(3.0)
+    e_v5p._tick(time.perf_counter() - 0.010)
+    assert e_v5p.step_times[1] == pytest.approx(
+        3.0 * e_v5p.step_times[0], rel=0.05)
+
+
+def test_hetero_failover_when_only_v5p_prefill_engine_dies(params):
+    """Mixed fleet: the sole (v5p) prefill engine dies mid-run; failover
+    must promote a v5e decode engine so the cluster keeps serving."""
+    reqs = gen_requests(4, seed=21, osl=4)
+    e_p = Engine(0, CFG, params, slots=4, capacity=48, chip=TPU_V5P)
+    dec = [Engine(10 + i, CFG, params, slots=4, capacity=48, chip=TPU_V5E)
+           for i in range(2)]
+    orch = disagg(params, [e_p], dec, elastic=ElasticRateMatcher())
+    fired = [False]
+    orig = e_p.prefill
+    def flaky(prompt):
+        if len(e_p.step_times) >= 1 and not fired[0]:
+            fired[0] = True
+            e_p.fail()
+        return orig(prompt)
+    e_p.prefill = flaky
+    m = orch.run(reqs, max_wall_s=600)
+    assert m["completed"] == 4
+    assert orch.stats.engine_failures == 1
+    assert e_p not in orch.prefill_pool
+    # a bandwidth-class engine now fills the compute role — capacity is
+    # re-weighted, not restored: 1 v5e-equivalent instead of ~2.8
+    assert len(orch.prefill_pool) == 1
+    assert orch.prefill_pool[0].hardware == "tpu-v5e"
+    assert orch.pool_hardware()["prefill"] == {"tpu-v5e": 1}
+
+
+def test_straggler_drain_skips_uniformly_slower_hardware_class(params):
+    """Two v5e engines + two 8x-slower-class engines share the decode
+    pool. Against a raw pool-global reference the slow class would be
+    mass-demoted (8x > factor 5); hardware-class normalization must keep
+    it serving."""
+    reqs = gen_requests(12, seed=22, osl=8)
+    dec = [Engine(10, CFG, params, slots=4, capacity=48, chip=TPU_V5E),
+           Engine(11, CFG, params, slots=4, capacity=48, chip=TPU_V5E),
+           Engine(12, CFG, params, slots=4, capacity=48, chip=SLOW_CHIP),
+           Engine(13, CFG, params, slots=4, capacity=48, chip=SLOW_CHIP)]
+    orch = disagg(params, [mk(0, params)], dec,
+                  elastic=ElasticRateMatcher(ElasticConfig(
+                      check_every=1, straggler_factor=5.0)))
+    m = orch.run(reqs, max_wall_s=600)
+    assert m["completed"] == 12
+    assert orch.stats.drained_stragglers == 0
+    assert not [mv for mv in orch.rate_matcher.elastic.moves
+                if mv.endswith(":straggler")]
+    # both slow-class engines still serve somewhere in the fleet
+    assert all(e in orch.engines() for e in dec)
+
+
+def test_straggler_across_singleton_classes_still_drained(params):
+    """Hardware normalization keeps the drain sharp even when every chip
+    class has a single engine — a 40x straggler v5e next to a lone v5p
+    must still go."""
+    reqs = gen_requests(12, seed=24, osl=8)
+    bad = Engine(11, CFG, params, slots=4, capacity=48, chip=TPU_V5E)
+    bad.slow_down(40.0)
+    dec = [bad, Engine(12, CFG, params, slots=4, capacity=48, chip=TPU_V5P)]
+    orch = disagg(params, [mk(0, params)], dec,
+                  elastic=ElasticRateMatcher(ElasticConfig(
+                      check_every=1, straggler_factor=5.0)))
+    m = orch.run(reqs, max_wall_s=600)
+    assert m["completed"] == 12
+    assert orch.stats.drained_stragglers >= 1
+    assert bad not in orch.decode_pool
+
+
+def test_can_release_weighted_capacity_floor(params):
+    """Rebalance guard: leave min_pool engines' worth of the pool's *own*
+    capacity — a uniformly slow fleet still rebalances, a pool is never
+    emptied, and uniform pools keep the old head-count semantics."""
+    em = ElasticRateMatcher(ElasticConfig(min_pool=1.0))
+    slows = [Engine(30 + i, CFG, params, slots=2, capacity=48,
+                    chip=SLOW_CHIP) for i in range(3)]
+    assert em._can_release(slows, slows[0])         # slow != frozen
+    assert em._can_release(slows[:2], slows[0])     # leaves one slow engine
+    assert not em._can_release(slows[:1], slows[0])  # never empty a pool
+    em2 = ElasticRateMatcher(ElasticConfig(min_pool=2.0))
+    v5es = [Engine(40 + i, CFG, params, slots=2, capacity=48,
+                   chip=TPU_V5E) for i in range(3)]
+    assert em2._can_release(v5es, v5es[0])          # 3 -> leaves 2
+    assert not em2._can_release(v5es[:2], v5es[0])  # 2 -> would leave 1
+
+
+def test_straggler_within_slow_class_still_drained(params):
+    """Per-class references must not blind the drain to a *real* straggler
+    inside the slower class."""
+    reqs = gen_requests(12, seed=23, osl=8)
+    bad = Engine(13, CFG, params, slots=4, capacity=48, chip=SLOW_CHIP)
+    bad.slow_down(40.0)             # 40x its own class's reference
+    dec = [Engine(11, CFG, params, slots=4, capacity=48, chip=SLOW_CHIP),
+           bad]
+    orch = disagg(params, [mk(0, params)], dec,
+                  elastic=ElasticRateMatcher(ElasticConfig(
+                      check_every=1, straggler_factor=5.0)))
+    m = orch.run(reqs, max_wall_s=600)
+    assert m["completed"] == 12
+    assert orch.stats.drained_stragglers >= 1
+    assert bad not in orch.decode_pool
+
+
+def test_elastic_move_prefers_chip_suited_to_destination(params):
+    """Among equally idle candidates, migration sends compute-rich silicon
+    to prefill and bandwidth-rich silicon to decode."""
+    e_v5e = Engine(0, CFG, params, slots=4, capacity=48, chip=TPU_V5E)
+    e_v5p = Engine(1, CFG, params, slots=4, capacity=48, chip=TPU_V5P)
+    orch = Cluster({"prefill": [mk(9, params)], "decode": [e_v5e, e_v5p]})
+    em = ElasticRateMatcher()
+    em._move(orch, orch.decode_pool, orch.prefill_pool, "test")
+    assert e_v5p in orch.prefill_pool       # flops-rich goes to prefill
+    assert e_v5e in orch.decode_pool
+    # and back toward decode: the bandwidth-rich chip wins
+    orch2 = Cluster({"prefill": [Engine(2, CFG, params, slots=4, capacity=48,
+                                        chip=TPU_V5E),
+                                 Engine(3, CFG, params, slots=4, capacity=48,
+                                        chip=TPU_V5P)],
+                     "decode": [mk(8, params)]})
+    em._move(orch2, orch2.prefill_pool, orch2.decode_pool, "test")
+    assert orch2.decode_pool[-1].hardware == "tpu-v5p"   # higher hbm_bw
 
 
 # ---------------------------------------------------------------------------
