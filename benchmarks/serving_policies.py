@@ -104,7 +104,7 @@ def main(argv=None) -> None:
     import jax
     import numpy as np
 
-    from repro.core.hardware import get_chip
+    from repro.core.hardware import CHIP_NAMES, get_chip
     from repro.models import transformer as T
     from repro.models.config import ModelConfig
     from repro.serving.cluster import Cluster
@@ -124,9 +124,9 @@ def main(argv=None) -> None:
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="trajectory file (one record per workload x "
                     "policy); '-' disables")
-    ap.add_argument("--prefill-chip", choices=["v5e", "v5p"], default="v5e",
+    ap.add_argument("--prefill-chip", choices=CHIP_NAMES, default="v5e",
                     help="hardware class of the prefill pool")
-    ap.add_argument("--decode-chip", choices=["v5e", "v5p"], default="v5e",
+    ap.add_argument("--decode-chip", choices=CHIP_NAMES, default="v5e",
                     help="hardware class of the decode pool")
     ap.add_argument("--hetero-out", default="BENCH_hetero.json",
                     help="heterogeneous-hardware comparison artifact "

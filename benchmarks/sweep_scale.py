@@ -1,0 +1,156 @@
+"""Sweep-engine scale benchmark: a paper-scale grid, timed end to end.
+
+Reproduces the paper's methodological claim at repo scale: a design-space
+grid of >= 100k perf-model points (models x chips x hetero pairs x
+ISL/OSL x reuse) swept by the vectorized engine, against the per-point
+scalar baseline measured on a sample of the same cells. Emits
+``BENCH_sweep.json``:
+
+  - points, cells, elapsed_s, points_per_s        (engine, store included)
+  - eval_points_per_s / baseline_points_per_s     (eval-only, same cells)
+  - speedup                                       (must be >= 20x full run)
+  - cache_hit_rerun_s                             (second run, all shards)
+  - frontier_areas                                (per model/mode, + /cost)
+
+Usage:
+  PYTHONPATH=src python benchmarks/sweep_scale.py            # full, ~100s
+  PYTHONPATH=src python benchmarks/sweep_scale.py --smoke    # CI schema run
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+import time
+
+
+SPEEDUP_FLOOR = 20.0      # acceptance: vectorized >= 20x scalar points/s
+MIN_POINTS = 100_000      # acceptance: a paper-scale grid
+
+
+def build_spec(smoke: bool):
+    from repro.sweeps import SweepSpec
+    if smoke:
+        return SweepSpec.create(
+            models=["llama-3.1-8b"], hardware=["v5e", "v5p:v5e"],
+            isl=[512], osl=[64], reuse=[0.0],
+            modes=["disagg"], ttl_targets=6, max_chips=16)
+    return SweepSpec.create(
+        models=["llama-3.1-8b", "llama-3.1-70b", "deepseek-r1"],
+        hardware=["v5e", "v5p", "h100", "a100", "v5p:v5e", "h100:a100"],
+        isl=[2048, 8192], osl=[128, 512], reuse=[0.0, 0.5],
+        modes=["disagg"], ttl_targets=24, max_chips=256)
+
+
+def measure_baseline(spec, sample: int):
+    """Scalar vs vectorized points/s on the same sample of cells,
+    evaluation only (no rate matching, no store IO on either side) —
+    the honest apples-to-apples denominator for the speedup claim."""
+    from repro.core.design_space import sweep_decode, sweep_prefill
+    from repro.core.hardware import as_system
+    from repro.core.paper_models import get_perf_model
+    from repro.sweeps.vectorized import sweep_decode_vec, sweep_prefill_vec
+
+    cells = [c for c in spec.expand() if c.mode == "disagg"][:sample]
+    n_scalar = n_vec = 0
+    t_scalar = t_vec = 0.0
+    for cell in cells:
+        model = get_perf_model(cell.model)
+        pre_sys = as_system(cell.prefill_chip)
+        dec_sys = as_system(cell.decode_chip)
+        isl_eff = max(1, round(cell.isl * (1.0 - cell.reuse)))
+        kv = cell.isl + cell.osl // 2
+        ctx = cell.isl + cell.osl
+
+        t0 = time.perf_counter()
+        pre = sweep_prefill(model, isl_eff, pre_sys,
+                            max_chips=cell.max_chips, mem_isl=cell.isl)
+        dec = sweep_decode(model, kv, dec_sys, max_chips=cell.max_chips,
+                           max_ctx=ctx)
+        t_scalar += time.perf_counter() - t0
+        n_scalar += len(pre) + len(dec)
+
+        t0 = time.perf_counter()
+        pre_v = sweep_prefill_vec(model, isl_eff, pre_sys,
+                                  max_chips=cell.max_chips,
+                                  mem_isl=cell.isl)
+        dec_v = sweep_decode_vec(model, kv, dec_sys,
+                                 max_chips=cell.max_chips, max_ctx=ctx)
+        t_vec += time.perf_counter() - t0
+        n_vec += len(pre_v) + len(dec_v)
+        assert len(pre) == len(pre_v) and len(dec) == len(dec_v), \
+            "scalar / vectorized sweeps disagree on feasible point count"
+    return (n_scalar / t_scalar if t_scalar > 0 else 0.0,
+            n_vec / t_vec if t_vec > 0 else 0.0)
+
+
+def main(argv=None):
+    sys.path.insert(0, "src")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI schema validation (skips the "
+                    "100k-point and 20x assertions)")
+    ap.add_argument("--store", default=".sweeps-bench")
+    ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--fresh", action="store_true",
+                    help="wipe the store first (measure a cold run)")
+    ap.add_argument("--out", default="BENCH_sweep.json")
+    ap.add_argument("--baseline-cells", type=int, default=3,
+                    help="cells sampled for the scalar baseline")
+    args = ap.parse_args(argv)
+
+    from repro.sweeps import SweepStore, run_sweep
+
+    spec = build_spec(args.smoke)
+    if args.fresh:
+        shutil.rmtree(args.store, ignore_errors=True)
+    store = SweepStore(args.store)
+
+    log = lambda s: print(s, file=sys.stderr)
+    report = run_sweep(spec, store, workers=args.workers, log=log)
+
+    t0 = time.perf_counter()
+    rerun = run_sweep(spec, store, workers=0)
+    cache_hit_rerun_s = time.perf_counter() - t0
+    assert rerun.cells_run == 0, \
+        f"rerun recomputed {rerun.cells_run} cells — cache miss"
+    assert rerun.points == report.points or report.cells_cached > 0
+
+    baseline_pps, eval_pps = measure_baseline(spec, args.baseline_cells)
+    speedup = eval_pps / baseline_pps if baseline_pps > 0 else 0.0
+
+    result = {
+        "bench": "sweep_scale",
+        "smoke": args.smoke,
+        "spec_hash": spec.spec_hash(),
+        "cells": report.cells_total,
+        "cells_cached": report.cells_cached,
+        "points": rerun.points,             # full-grid count (incl. cached)
+        "elapsed_s": round(report.elapsed_s, 3),
+        "points_per_s": round(report.points_per_s, 1),
+        "eval_points_per_s": round(eval_pps, 1),
+        "baseline_points_per_s": round(baseline_pps, 1),
+        "speedup": round(speedup, 1),
+        "cache_hit_rerun_s": round(cache_hit_rerun_s, 4),
+        "frontier_areas": rerun.frontier_areas,
+    }
+    if args.out != "-":
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1, sort_keys=True)
+            f.write("\n")
+    print(json.dumps(result, indent=1, sort_keys=True))
+
+    if not args.smoke:
+        assert rerun.points >= MIN_POINTS, \
+            f"grid too small: {rerun.points} < {MIN_POINTS} points"
+        assert speedup >= SPEEDUP_FLOOR, \
+            f"vectorized speedup {speedup:.1f}x < {SPEEDUP_FLOOR}x"
+        assert cache_hit_rerun_s < report.elapsed_s / 5 or \
+            report.cells_cached == report.cells_total, \
+            "cache-hit rerun should be far cheaper than the cold sweep"
+    return result
+
+
+if __name__ == "__main__":
+    main()

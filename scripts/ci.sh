@@ -43,4 +43,42 @@ print("BENCH_hetero.json OK: hetero area %.1f >= homog area %.1f"
       % (a["hetero"]["area"], a["homog_decode_chip"]["area"]))
 PY
 
+echo "== sweep engine (smoke) =="
+SWEEP_STORE="$(mktemp -d)"
+trap 'rm -rf "$SWEEP_STORE"' EXIT
+python -m repro.launch.sweep --models llama-3.1-8b \
+    --hardware v5e v5p:v5e --isl 512 --osl 64 --reuse 0.0 0.5 \
+    --modes disagg coloc --ttl-targets 6 --max-chips 16 \
+    --store "$SWEEP_STORE" --quiet > /tmp/sweep_run1.json
+python -m repro.launch.sweep --models llama-3.1-8b \
+    --hardware v5e v5p:v5e --isl 512 --osl 64 --reuse 0.0 0.5 \
+    --modes disagg coloc --ttl-targets 6 --max-chips 16 \
+    --store "$SWEEP_STORE" --quiet > /tmp/sweep_run2.json
+rm -f BENCH_sweep.json
+python benchmarks/sweep_scale.py --smoke --fresh \
+    --store "$SWEEP_STORE/bench" > /dev/null
+python - <<'PY'
+import json, sys
+r1 = json.load(open("/tmp/sweep_run1.json"))
+r2 = json.load(open("/tmp/sweep_run2.json"))
+assert r1["cells_run"] == r1["cells_total"] > 0, r1
+assert r2["cells_run"] == 0 and r2["cells_cached"] == r1["cells_total"], \
+    f"second sweep run was not a full cache hit: {r2}"
+assert r2["points"] == r1["points"] and r2["records"] == r1["records"]
+assert r2["frontier_areas"] == r1["frontier_areas"]
+try:
+    d = json.load(open("BENCH_sweep.json"))
+except FileNotFoundError:
+    sys.exit("BENCH_sweep.json missing: sweep benchmark did not emit it")
+required = {"bench", "spec_hash", "cells", "points", "elapsed_s",
+            "points_per_s", "eval_points_per_s", "baseline_points_per_s",
+            "speedup", "cache_hit_rerun_s", "frontier_areas"}
+missing = required - set(d)
+assert not missing, f"BENCH_sweep.json missing keys: {sorted(missing)}"
+assert d["points"] > 0 and d["speedup"] > 1.0, d
+assert d["cache_hit_rerun_s"] < d["elapsed_s"] or d["cells_cached"] > 0, d
+print("sweep smoke OK: %d cells cached on rerun, smoke speedup %.1fx"
+      % (r2["cells_cached"], d["speedup"]))
+PY
+
 echo "CI OK"

@@ -1,0 +1,56 @@
+"""Regenerate the sweep-engine golden: tests/data/sweeps/golden_small.json.
+
+A tiny-but-representative grid (dense + MLA/MoE model, homogeneous +
+heterogeneous hardware, both serving modes, a reuse axis) swept into a
+throwaway store; the resulting records are the golden. Rerun after any
+*intentional* perf-model or rate-matching change:
+
+    PYTHONPATH=src python scripts/gen_sweep_golden.py
+
+The engine is deterministic (pure float64 arithmetic, no RNG, no
+wall-clock in records), so regeneration on any platform must be a no-op
+unless the model changed.
+"""
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sweeps import SweepResult, SweepSpec, SweepStore, run_sweep
+
+OUT = os.path.join(os.path.dirname(__file__), "..",
+                   "tests", "data", "sweeps", "golden_small.json")
+
+
+def golden_spec() -> SweepSpec:
+    return SweepSpec.create(
+        models=["llama-3.1-8b", "deepseek-r1"],
+        hardware=["v5e", "v5p", "v5p:v5e"],
+        isl=[512], osl=[64], reuse=[0.0, 0.5],
+        modes=["disagg", "coloc"], ttl_targets=8, max_chips=16)
+
+
+def main() -> None:
+    spec = golden_spec()
+    with tempfile.TemporaryDirectory() as root:
+        store = SweepStore(root)
+        report = run_sweep(spec, store)
+        records = SweepResult(store, spec).records()
+    blob = {
+        "spec": spec.canonical(),
+        "spec_hash": spec.spec_hash(),
+        "points": report.points,
+        "records": records,
+    }
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.relpath(OUT)}: {len(records)} records, "
+          f"{report.points} points, spec {spec.spec_hash()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,8 +24,19 @@ FTL_CUTOFF_DEFAULT = 10.0          # paper: FTL > 10 s excluded
 
 
 def default_ttl_targets(n: int = 24) -> List[float]:
-    """Log-spaced TTL targets: 2 ms .. 1 s (interactivity 1..500 tok/s/user)."""
-    return [2e-3 * (500 ** (i / (n - 1))) for i in range(n)]
+    """Log-spaced TTL targets: 2 ms .. 1 s (interactivity 1..500 tok/s/user).
+    ``n=1`` degenerates to the tightest target alone."""
+    return [2e-3 * (500 ** (i / max(n - 1, 1))) for i in range(n)]
+
+
+def matched_objective(r, weight: str = "chip") -> float:
+    """The y-axis of a frontier point: per-chip (paper Table 1) or
+    per-dollar (cost-weighted) throughput of a ``RateMatchedPoint``."""
+    if weight == "chip":
+        return r.overall_tput_per_chip
+    if weight == "cost":
+        return r.overall_tput_per_dollar
+    raise ValueError(f"weight must be 'chip' or 'cost': {weight!r}")
 
 
 def disaggregated_frontier(model: PerfLLM, isl: int, osl: int,
@@ -34,7 +45,9 @@ def disaggregated_frontier(model: PerfLLM, isl: int, osl: int,
                            ttl_targets: Optional[Sequence[float]] = None,
                            max_chips: Optional[int] = None,
                            reuse_fraction: float = 0.0,
-                           hardware: Optional[dict] = None
+                           hardware: Optional[dict] = None,
+                           weight: str = "chip",
+                           engine: str = "scalar"
                            ) -> List[Point]:
     """``reuse_fraction`` models KV-cache reuse (multi-turn / shared-prefix
     workloads): prefill computes only the un-cached ``isl * (1 - reuse)``
@@ -46,24 +59,44 @@ def disaggregated_frontier(model: PerfLLM, isl: int, osl: int,
     ``ChipConfig`` / registry names) sweeps each phase's design space on
     its own chip; a missing key falls back to ``sys_``. Throughput stays
     normalized per chip over *all* chips of the matched deployment, so
-    heterogeneous and homogeneous frontiers share one y-axis."""
+    heterogeneous and homogeneous frontiers share one y-axis.
+
+    ``weight``: ``"chip"`` (tokens/s/chip, the paper's axis) or ``"cost"``
+    (tokens/s per $/hour, using ``ChipConfig.cost_per_hour``).
+
+    ``engine``: ``"scalar"`` walks the per-point python perf model;
+    ``"vectorized"`` delegates to ``repro.sweeps.vectorized`` (NumPy over
+    the whole design grid — same formulas, same selections, ~20-100x
+    faster; equivalence is property-tested in tests/test_sweeps.py)."""
     assert 0.0 <= reuse_fraction < 1.0, reuse_fraction
+    if weight not in ("chip", "cost"):    # fail before sweeping anything
+        raise ValueError(f"weight must be 'chip' or 'cost': {weight!r}")
     pre_sys, dec_sys = sys_, sys_
     if hardware:
         unknown = set(hardware) - {"prefill", "decode"}
         assert not unknown, f"hardware keys must be prefill/decode: {unknown}"
         pre_sys = as_system(hardware.get("prefill", sys_), base=sys_)
         dec_sys = as_system(hardware.get("decode", sys_), base=sys_)
-    isl_eff = max(1, round(isl * (1.0 - reuse_fraction)))
-    pre = sweep_prefill(model, isl_eff, pre_sys, max_chips=max_chips,
-                        mem_isl=isl)
-    dec = sweep_decode(model, isl + osl // 2, dec_sys, max_chips=max_chips,
-                       max_ctx=isl + osl)
-    matched = dynamic_rate_match(pre, dec, isl=isl_eff, osl=osl,
-                                 ftl_cutoff=ftl_cutoff,
-                                 ttl_targets=list(ttl_targets or
-                                                  default_ttl_targets()))
-    pts = [(r.tps_per_user, r.overall_tput_per_chip) for r in matched]
+    targets = list(ttl_targets or default_ttl_targets())
+    if engine == "vectorized":
+        from repro.sweeps.vectorized import matched_points_vec
+        matched = matched_points_vec(
+            model, isl, osl, pre_sys, dec_sys, ftl_cutoff=ftl_cutoff,
+            ttl_targets=targets, max_chips=max_chips,
+            reuse_fraction=reuse_fraction)
+    elif engine == "scalar":
+        isl_eff = max(1, round(isl * (1.0 - reuse_fraction)))
+        pre = sweep_prefill(model, isl_eff, pre_sys, max_chips=max_chips,
+                            mem_isl=isl)
+        dec = sweep_decode(model, isl + osl // 2, dec_sys,
+                           max_chips=max_chips, max_ctx=isl + osl)
+        matched = dynamic_rate_match(pre, dec, isl=isl_eff, osl=osl,
+                                     ftl_cutoff=ftl_cutoff,
+                                     ttl_targets=targets)
+    else:
+        raise ValueError(f"engine must be 'scalar' or 'vectorized': "
+                         f"{engine!r}")
+    pts = [(r.tps_per_user, matched_objective(r, weight)) for r in matched]
     return pareto_frontier(pts)
 
 
@@ -75,7 +108,12 @@ def best_hardware_frontier(model: PerfLLM, isl: int, osl: int,
     ``options`` (all |options|^2 prefill x decode pairs, homogeneous pairs
     included). By construction this frontier dominates-or-ties each
     homogeneous frontier at the same chip budget — the analytic upper
-    bound of what heterogeneous pools can buy."""
+    bound of what heterogeneous pools can buy.
+
+    ``weight="cost"`` ranks deployments by tokens/s per dollar instead of
+    per chip — under it a cheap-silicon pool can dominate a faster one,
+    which chip-count weighting structurally cannot show. ``engine=
+    "vectorized"`` sweeps each pair on the NumPy path."""
     pts: List[Point] = []
     for pre_hw in options:
         for dec_hw in options:
@@ -107,8 +145,19 @@ def workload_frontier(model: PerfLLM, workload,
             model, isl, osl, sys_,
             reuse_fraction=summary.reuse_fraction, **kw)
     if mode == "coloc":
+        # one mixed pool: no per-pool hardware, and the vectorized coloc
+        # path lives in repro.sweeps.engine
         kw.pop("hardware", None)
-        return colocated_frontier(model, isl, osl, sys_, **kw)
+        kw.pop("engine", None)
+        weight = kw.pop("weight", "chip")
+        if weight not in ("chip", "cost"):   # fail before sweeping anything
+            raise ValueError(f"weight must be 'chip' or 'cost': {weight!r}")
+        f = colocated_frontier(model, isl, osl, sys_, **kw)
+        if weight == "cost":
+            # every instance runs the one chip, so per-dollar is a uniform
+            # rescale — keeps coloc/disagg cost frontiers unit-compatible
+            f = [(x, y / sys_.chip.cost_per_hour) for x, y in f]
+        return f
     raise ValueError(f"mode must be 'disagg' or 'coloc': {mode!r}")
 
 

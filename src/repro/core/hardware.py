@@ -27,6 +27,8 @@ class ChipConfig:
     ici_bw_per_link: float     # B/s, unidirectional
     ici_links: int             # links per chip participating in a collective
     dcn_bw: float              # B/s per chip for cross-pod / pool transfers
+    cost_per_hour: float = 1.0  # $/chip-hour (list-price scale; cost-weighted
+    #                             frontiers compare tokens/s per dollar)
 
     @property
     def ici_bw(self) -> float:
@@ -42,6 +44,7 @@ TPU_V5E = ChipConfig(
     ici_bw_per_link=50e9,
     ici_links=4,
     dcn_bw=25e9,
+    cost_per_hour=1.2,          # GCP on-demand us-central (public list)
 )
 
 TPU_V5P = ChipConfig(
@@ -53,15 +56,51 @@ TPU_V5P = ChipConfig(
     ici_bw_per_link=100e9,
     ici_links=6,
     dcn_bw=25e9,
+    cost_per_hour=4.2,          # GCP on-demand us-central (public list)
+)
+
+# GPU-class silicon, so sweeps and per-pool --prefill-chip/--decode-chip
+# cover the multi-vendor disaggregation setting (ZTE's multi-vendor PD;
+# "From Attention to Disaggregation"). The ICI analog is the NVLink
+# domain; dcn is the per-GPU scale-out NIC.
+GPU_H100 = ChipConfig(
+    name="gpu-h100",
+    flops_bf16=989e12,          # SXM dense BF16 (NVIDIA H100 datasheet)
+    flops_int8=1979e12,         # dense INT8 TOPS
+    hbm_bw=3350e9,              # HBM3, 3.35 TB/s
+    hbm_cap=80 * 2**30,
+    ici_bw_per_link=25e9,       # NVLink4: 18 links x 25 GB/s per direction
+    ici_links=18,
+    dcn_bw=50e9,                # 400 Gb/s ConnectX-7 per GPU
+    cost_per_hour=9.8,          # ~GCP a3-highgpu per-GPU on-demand
+)
+
+GPU_A100 = ChipConfig(
+    name="gpu-a100",
+    flops_bf16=312e12,          # SXM dense BF16 (NVIDIA A100 datasheet)
+    flops_int8=624e12,
+    hbm_bw=2039e9,              # 80 GB HBM2e, 2.04 TB/s
+    hbm_cap=80 * 2**30,
+    ici_bw_per_link=25e9,       # NVLink3: 12 links x 25 GB/s per direction
+    ici_links=12,
+    dcn_bw=25e9,                # 200 Gb/s ConnectX-6 per GPU
+    cost_per_hour=3.7,          # ~GCP a2-ultragpu per-GPU on-demand
 )
 
 
 CHIPS: Dict[str, ChipConfig] = {
     "v5e": TPU_V5E,
     "v5p": TPU_V5P,
+    "h100": GPU_H100,
+    "a100": GPU_A100,
     TPU_V5E.name: TPU_V5E,
     TPU_V5P.name: TPU_V5P,
+    GPU_H100.name: GPU_H100,
+    GPU_A100.name: GPU_A100,
 }
+
+# short registry aliases, for CLI choices= lists
+CHIP_NAMES = tuple(sorted(k for k in CHIPS if "-" not in k))
 
 
 def get_chip(name: str) -> ChipConfig:

@@ -1,8 +1,9 @@
 """PerfLLM descriptions of the paper's study models + assigned-arch bridge."""
 from __future__ import annotations
 
+from typing import Dict
+
 from repro.core.perf_model import PerfLLM
-from repro.models.config import ModelConfig
 
 # --- the paper's own case studies -----------------------------------------
 
@@ -25,7 +26,26 @@ LLAMA31_405B = PerfLLM(
     num_kv_heads=8, d_ff=53248, vocab_size=128256)
 
 
-def perf_llm_from_config(cfg: ModelConfig) -> PerfLLM:
+PAPER_MODELS: Dict[str, PerfLLM] = {
+    m.name: m for m in (DEEPSEEK_R1, LLAMA31_8B, LLAMA31_70B, LLAMA31_405B)
+}
+
+
+def get_perf_model(name: str) -> PerfLLM:
+    """Resolve a sweep-spec model name: a paper study model, or any
+    assigned-arch id from ``repro.configs`` (bridged full-size config).
+    The configs import is lazy — it pulls jax, and the sweep engine's
+    worker processes stay jax-free when specs only name paper models."""
+    if name in PAPER_MODELS:
+        return PAPER_MODELS[name]
+    from repro.configs import ARCH_IDS, get_config
+    if name in ARCH_IDS:
+        return perf_llm_from_config(get_config(name))
+    known = sorted(PAPER_MODELS) + sorted(ARCH_IDS)
+    raise KeyError(f"unknown model {name!r}; known: {known}")
+
+
+def perf_llm_from_config(cfg: "ModelConfig") -> PerfLLM:
     """Bridge an executable assigned-arch config into the analytic model."""
     moe = cfg.moe
     return PerfLLM(

@@ -63,6 +63,24 @@ class RateMatchedPoint:
     def heterogeneous(self) -> bool:
         return self.prefill_chip != self.decode_chip
 
+    @property
+    def cost_per_hour(self) -> float:
+        """$/hour of the full matched deployment (both pools at their own
+        chip's list price)."""
+        return (self.num_prefill_chips * self.prefill.system.chip.cost_per_hour
+                + self.num_decode_chips * self.decode.system.chip.cost_per_hour)
+
+    @property
+    def overall_tput_per_dollar(self) -> float:
+        """Tokens/s per $/hour — the cost-weighted objective. Chip-count
+        weighting (``overall_tput_per_chip``) treats a v5e and an h100 as
+        equal denominators; dollars are the denominator operators actually
+        budget."""
+        cost = self.cost_per_hour
+        if cost <= 0:
+            return 0.0
+        return self.overall_tput_per_chip * self.total_chips / cost
+
     def pool_rates(self) -> Tuple[float, float]:
         """(prefill, decode) balanced request rates over the sized pools."""
         pre_tput = self.prefill.batch / (self.prefill.perf.latency_s

@@ -21,7 +21,7 @@ import sys
 import jax
 
 from repro.configs import ARCH_IDS, get_smoke_config
-from repro.core.hardware import get_chip
+from repro.core.hardware import CHIP_NAMES, get_chip
 from repro.models import transformer as T
 from repro.serving.cluster import Cluster
 from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
@@ -99,10 +99,10 @@ def main(argv=None):
                     help="prefill:decode ratio for --rate-matcher static")
     ap.add_argument("--prefill-engines", type=int, default=1)
     ap.add_argument("--decode-engines", type=int, default=2)
-    ap.add_argument("--prefill-chip", choices=["v5e", "v5p"], default="v5e",
+    ap.add_argument("--prefill-chip", choices=CHIP_NAMES, default="v5e",
                     help="hardware class of the prefill pool (virtual step "
                     "times scale by the chip's relative speed)")
-    ap.add_argument("--decode-chip", choices=["v5e", "v5p"], default="v5e",
+    ap.add_argument("--decode-chip", choices=CHIP_NAMES, default="v5e",
                     help="hardware class of the decode pool")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)

@@ -1,0 +1,111 @@
+"""Query API over a swept store: frontiers, hardware ranking, sensitivity.
+
+``SweepResult`` is a read-side view — it never evaluates anything, it
+filters + aggregates the records a sweep persisted, so navigating a
+finished hundreds-of-thousands-of-points sweep is interactive."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.pareto import area_under_frontier, pareto_frontier
+from repro.sweeps.spec import SweepSpec
+from repro.sweeps.store import SweepStore
+
+Point = Tuple[float, float]
+
+_WEIGHT_FIELD = {"chip": "tput_per_chip", "cost": "tput_per_dollar"}
+
+# record fields usable as filter kwargs and sensitivity axes
+AXES = ("model", "mode", "prefill_chip", "decode_chip", "isl", "osl",
+        "reuse")
+
+
+class SweepResult:
+    def __init__(self, store: SweepStore, spec: SweepSpec):
+        self.store = store
+        self.spec = spec
+        self._records: Optional[List[dict]] = None
+
+    # -- record access ------------------------------------------------------
+
+    def records(self, **filters) -> List[dict]:
+        """Completed records matching ``filters`` (field=value, or
+        field=list-of-values). Loaded once, filtered per call."""
+        if self._records is None:
+            self._records = list(self.store.iter_records(self.spec))
+        for k in filters:
+            if k not in AXES and k != "variant":
+                raise KeyError(f"unknown filter {k!r}; filterable: {AXES}")
+        out = []
+        for r in self._records:
+            ok = True
+            for k, v in filters.items():
+                vs = v if isinstance(v, (list, tuple, set)) else (v,)
+                if r.get(k) not in vs:
+                    ok = False
+                    break
+            if ok:
+                out.append(r)
+        return out
+
+    def invalidate(self) -> None:
+        """Drop the record cache (after resuming more cells)."""
+        self._records = None
+
+    # -- frontiers ----------------------------------------------------------
+
+    def frontier(self, weight: str = "chip", **filters) -> List[Point]:
+        """Pareto frontier of the filtered records; ``weight="cost"``
+        puts tokens/s per $/hour on the y-axis (throughput per dollar,
+        not per chip)."""
+        field = _WEIGHT_FIELD[weight]
+        return pareto_frontier(
+            [(r["tps_per_user"], r[field]) for r in self.records(**filters)])
+
+    def area(self, window: Tuple[float, float] = (10.0, 300.0),
+             weight: str = "chip", **filters) -> float:
+        return area_under_frontier(self.frontier(weight, **filters),
+                                   *window)
+
+    def best_hardware(self, weight: str = "chip",
+                      window: Tuple[float, float] = (10.0, 300.0),
+                      **filters) -> List[Tuple[Tuple[str, str], float]]:
+        """Hardware pairs ranked by frontier area over the interactivity
+        window, best first. With ``weight="cost"`` the ranking is
+        throughput-per-dollar — the answer to "which silicon should I
+        buy", where per-chip weighting answers "which is fastest"."""
+        out: List[Tuple[Tuple[str, str], float]] = []
+        for pre, dec in sorted({(r["prefill_chip"], r["decode_chip"])
+                                for r in self.records(**filters)}):
+            # pair keys override any caller filter on the same axis (the
+            # pair set is already restricted by it)
+            a = self.area(window, weight,
+                          **{**filters, "prefill_chip": pre,
+                             "decode_chip": dec})
+            out.append(((pre, dec), a))
+        out.sort(key=lambda t: (-t[1], t[0]))
+        return out
+
+    def sensitivity(self, axis: str, weight: str = "chip",
+                    window: Tuple[float, float] = (10.0, 300.0),
+                    **filters) -> List[Tuple[object, float]]:
+        """Frontier area as a function of one sweep axis, everything else
+        pooled (or pinned via ``filters``) — e.g. ``sensitivity("isl")``
+        shows how the achievable frontier decays as prompts grow, and
+        ``sensitivity("reuse")`` how much KV reuse buys back."""
+        if axis not in AXES:
+            raise KeyError(f"unknown axis {axis!r}; axes: {AXES}")
+        values = sorted({r[axis] for r in self.records(**filters)})
+        return [(v, self.area(window, weight, **{**filters, axis: v}))
+                for v in values]
+
+    def summary(self) -> Dict[str, object]:
+        recs = self.records()
+        return {
+            "spec_hash": self.spec.spec_hash(),
+            "records": len(recs),
+            "models": sorted({r["model"] for r in recs}),
+            "modes": sorted({r["mode"] for r in recs}),
+            "hardware": sorted({f"{r['prefill_chip']}:{r['decode_chip']}"
+                                for r in recs}),
+        }

@@ -159,8 +159,12 @@ def test_as_system_coercion():
     assert get_chip("v5p") is TPU_V5P
     assert relative_speed(TPU_V5E) == pytest.approx(1.0)
     assert relative_speed(TPU_V5P) > 2.0        # compute- and bw-richer
+    # GPU-class registry entries (PR 4): h100/a100 resolve like TPUs do
+    assert as_system("h100").chip.name == "gpu-h100"
+    assert get_chip("a100").hbm_cap == 80 * 2**30
+    assert get_chip("h100").cost_per_hour > get_chip("v5e").cost_per_hour
     with pytest.raises(KeyError):
-        as_system("h100")
+        as_system("b200")
     with pytest.raises(TypeError):
         as_system(42)
 

@@ -217,3 +217,56 @@ def test_checkpoint_roundtrip(seed):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     finally:
         shutil.rmtree(d)
+
+
+# ---------------------------------------------------------------------------
+# sweeps: scalar <-> vectorized perf-model equivalence (property form; the
+# deterministic twin lives in tests/test_sweeps.py)
+
+MODEL_ST = st.builds(
+    PerfLLM,
+    name=st.just("prop-model"),
+    num_layers=st.integers(2, 96),
+    d_model=st.sampled_from([512, 1024, 4096, 8192]),
+    num_heads=st.sampled_from([8, 32, 64]),
+    num_kv_heads=st.sampled_from([1, 4, 8]),
+    d_ff=st.sampled_from([2048, 14336]),
+    vocab_size=st.just(32000),
+    attention=st.sampled_from(["gqa", "mla", "none"]),
+    num_experts=st.sampled_from([0, 16]),
+    top_k=st.just(2),
+    d_ff_expert=st.just(1024),
+    sliding_window=st.sampled_from([0, 512]),
+)
+
+
+@given(MODEL_ST, st.integers(1, 1024), st.sampled_from([64, 777, 4096]),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_vectorized_perf_matches_scalar_property(model, batch, seqlen, seed):
+    from repro.core.perf_model import prefill_perf
+    from repro.sweeps.vectorized import (build_grid, decode_step_perf_vec,
+                                         prefill_perf_vec)
+    from repro.core.hardware import as_system
+    sys_ = as_system("v5p")
+    g = build_grid(model, sys_, prefill=True, batches=[batch], max_chips=16)
+    if len(g) == 0:
+        return
+    rng = np.random.default_rng(seed)
+    i = int(rng.integers(len(g)))
+    sub = g.select(np.arange(len(g)) == i)
+    m = g.mapping(i)
+    pv = prefill_perf_vec(model, sub, seqlen, sys_)
+    ps = prefill_perf(model, m, batch, seqlen, sys_)
+    np.testing.assert_allclose(
+        [pv.latency_s[0], pv.compute_s[0], pv.memory_s[0],
+         pv.collective_s[0]],
+        [ps.latency_s, ps.compute_s, ps.memory_s, ps.collective_s],
+        rtol=1e-9)
+    dv = decode_step_perf_vec(model, sub, seqlen, sys_)
+    ds = decode_step_perf(model, m, batch, seqlen, sys_)
+    np.testing.assert_allclose(
+        [dv.latency_s[0], dv.compute_s[0], dv.memory_s[0],
+         dv.collective_s[0]],
+        [ds.latency_s, ds.compute_s, ds.memory_s, ds.collective_s],
+        rtol=1e-9)
