@@ -44,6 +44,147 @@ from repro.serving.request import Request, sla_metrics
 PREFILL, DECODE, MIXED = "prefill", "decode", "mixed"
 
 
+class AdmissionQueue:
+    """Indexed admission queue: the list the event loop used to scan, with
+    the two hot operations made O(1) — removal by identity (every admission
+    did ``list.remove``) and front-insertion (every requeue) — and the
+    ready-prefix scan made O(ready) instead of O(queued).
+
+    Order semantics match the old ``List[Request]`` exactly: requeued
+    requests sit at the front (most recent requeue first), arrivals follow
+    in append order. Arrivals from ``Workload.poll`` are chronological, so
+    the "arrived by now" requests form a prefix and ``ready(now)`` stops at
+    the first future arrival; a caller that appends out of order only
+    downgrades the scan to O(queued), never changes the result."""
+
+    def __init__(self):
+        # two insertion-ordered id(req)->req maps: _front holds requeues
+        # (iterated newest-first), _back holds arrivals in append order
+        self._front: Dict[int, Request] = {}
+        self._back: Dict[int, Request] = {}
+        self._back_sorted = True
+        self._last_arrival = float("-inf")
+
+    def append(self, req: Request) -> None:
+        self._back[id(req)] = req
+        if req.arrival_t < self._last_arrival:
+            self._back_sorted = False
+        else:
+            self._last_arrival = req.arrival_t
+
+    def push_front(self, req: Request) -> None:
+        """Front-insert (requeue). Re-inserting a request that is already
+        queued *moves* it to the front — a single entry, never two, so a
+        later ``remove`` can't leave a ghost copy behind."""
+        k = id(req)
+        self._back.pop(k, None)
+        self._front.pop(k, None)
+        self._front[k] = req
+
+    def insert(self, index: int, req: Request) -> None:
+        assert index == 0, "admission queue only supports front insertion"
+        self.push_front(req)
+
+    def remove(self, req: Request) -> None:
+        k = id(req)
+        if k in self._front:
+            del self._front[k]
+        else:
+            del self._back[k]       # KeyError ~ the old ValueError
+
+    def __len__(self) -> int:
+        return len(self._front) + len(self._back)
+
+    def __iter__(self):
+        yield from reversed(self._front.values())
+        yield from self._back.values()
+
+    def ready(self, now: float) -> List[Request]:
+        """Arrived requests in queue order (requeues first). Front entries
+        are filtered on arrival too — in-repo requeues always have past
+        arrivals, but the queue is public and the old list scan excluded
+        future-dated entries wherever they sat."""
+        out = [r for r in reversed(self._front.values())
+               if r.arrival_t <= now]
+        for r in self._back.values():
+            if r.arrival_t <= now:
+                out.append(r)
+            elif self._back_sorted:
+                break
+        return out
+
+    def first_ready(self, now: float) -> Optional[Request]:
+        """Head of ``ready(now)`` without materializing it — the FCFS
+        admission probe, O(1) on chronological queues."""
+        for r in reversed(self._front.values()):
+            if r.arrival_t <= now:
+                return r
+        for r in self._back.values():
+            if r.arrival_t <= now:
+                return r
+            if self._back_sorted:
+                return None
+        return None
+
+    def ready_count(self, now: float) -> int:
+        n = sum(1 for r in self._front.values() if r.arrival_t <= now)
+        for r in self._back.values():
+            if r.arrival_t <= now:
+                n += 1
+            elif self._back_sorted:
+                break
+        return n
+
+    def next_future_arrival(self, now: float) -> Optional[float]:
+        """Earliest queued arrival strictly after ``now``, or None."""
+        future = None
+        for r in self._front.values():
+            if r.arrival_t > now and (future is None
+                                      or r.arrival_t < future):
+                future = r.arrival_t
+        for r in self._back.values():
+            if r.arrival_t > now:
+                if self._back_sorted:
+                    return (r.arrival_t if future is None
+                            else min(future, r.arrival_t))
+                if future is None or r.arrival_t < future:
+                    future = r.arrival_t
+        return future
+
+
+class ObservedList(list):
+    """A pool list that notifies the cluster on mutation, so cached healthy
+    views stay correct under failures, migrations, and straggler drains
+    (all of which edit pool lists directly)."""
+
+    def __init__(self, items, on_change):
+        super().__init__(items)
+        self._on_change = on_change
+
+    def _mut(name):
+        fn = getattr(list, name)
+
+        def wrapped(self, *a, **kw):
+            out = fn(self, *a, **kw)
+            self._on_change()
+            return out
+        wrapped.__name__ = name
+        return wrapped
+
+    append = _mut("append")
+    extend = _mut("extend")
+    insert = _mut("insert")
+    remove = _mut("remove")
+    pop = _mut("pop")
+    clear = _mut("clear")
+    sort = _mut("sort")
+    reverse = _mut("reverse")
+    __setitem__ = _mut("__setitem__")
+    __delitem__ = _mut("__delitem__")
+    __iadd__ = _mut("__iadd__")
+    del _mut
+
+
 @dataclasses.dataclass
 class PoolStats:
     prefill_busy_s: float = 0.0
@@ -56,7 +197,13 @@ class PoolStats:
 
 
 def kv_bytes(cache) -> int:
-    """Size of one request's KV/state handoff payload (the Eq 1-2 hop)."""
+    """Size of one request's KV/state handoff payload (the Eq 1-2 hop).
+    Called at most once per transferring request; caches that already
+    know their payload size expose ``nbytes`` directly and skip the
+    tensor walk."""
+    nbytes = getattr(cache, "nbytes", None)
+    if nbytes is not None:
+        return int(nbytes)
     return sum(int(np.prod(v.shape)) * v.dtype.itemsize
                for k, v in cache.items() if k != "pos")
 
@@ -69,14 +216,16 @@ class Cluster:
         from repro.serving.policies import FCFSScheduler, RoundRobinRouter
         assert pools and all(r in (PREFILL, DECODE, MIXED) for r in pools), \
             f"roles must be {PREFILL}/{DECODE}/{MIXED}: {list(pools)}"
+        self._views: Dict[str, List[Engine]] = {}
         self.pools: Dict[str, List[Engine]] = {
-            role: list(engines) for role, engines in pools.items()}
-        self.pools.setdefault(PREFILL, [])
-        self.pools.setdefault(DECODE, [])
+            role: ObservedList(engines, self._invalidate_views)
+            for role, engines in pools.items()}
+        self._ensure_pool(PREFILL)
+        self._ensure_pool(DECODE)
         self.scheduler = scheduler or FCFSScheduler()
         self.router = router or RoundRobinRouter()
         self.rate_matcher = rate_matcher
-        self.queue: List[Request] = []
+        self.queue = AdmissionQueue()
         self.pending_insert: List[Tuple[Request, int, Any,
                                         Optional[Engine]]] = []
         self.stats = PoolStats()
@@ -84,6 +233,28 @@ class Cluster:
         self._workload = None       # set while serve() is driving
 
     # -- pool views (also the legacy orchestrator attribute surface) -------
+
+    def _ensure_pool(self, role: str) -> List[Engine]:
+        pool = self.pools.get(role)
+        if pool is None:
+            pool = self.pools[role] = ObservedList(
+                [], self._invalidate_views)
+        return pool
+
+    def _invalidate_views(self) -> None:
+        self._views.clear()
+
+    def _healthy_view(self, key: str, roles: Tuple[str, ...]) -> List[Engine]:
+        """Cached healthy-engine list for a role set. Pool edits (failure,
+        migration, straggler drain) invalidate through ``ObservedList``;
+        ``Engine.fail()`` alone does not — the next use raises
+        ``EngineFailure`` and ``_fail_engine`` invalidates then."""
+        view = self._views.get(key)
+        if view is None:
+            view = [e for role in roles
+                    for e in self.pools.get(role, ()) if e.healthy]
+            self._views[key] = view
+        return view
 
     @property
     def prefill_pool(self) -> List[Engine]:
@@ -95,7 +266,7 @@ class Cluster:
 
     @property
     def mixed_pool(self) -> List[Engine]:
-        return self.pools.setdefault(MIXED, [])
+        return self._ensure_pool(MIXED)
 
     def prefill_capable(self) -> List[Engine]:
         return self.pools[PREFILL] + self.pools.get(MIXED, [])
@@ -103,13 +274,29 @@ class Cluster:
     def decode_capable(self) -> List[Engine]:
         return self.pools[DECODE] + self.pools.get(MIXED, [])
 
+    def prefill_capable_healthy(self) -> List[Engine]:
+        return self._healthy_view("prefill", (PREFILL, MIXED))
+
+    def decode_capable_healthy(self) -> List[Engine]:
+        return self._healthy_view("decode", (DECODE, MIXED))
+
     def engines(self) -> List[Engine]:
         return [e for pool in self.pools.values() for e in pool]
 
     def ready_requests(self) -> List[Request]:
         """Queued requests that have arrived, in queue order (requeued
         requests sit at the front)."""
-        return [r for r in self.queue if r.arrival_t <= self.now]
+        return self.queue.ready(self.now)
+
+    def ready_count(self) -> int:
+        """Number of arrived-but-unadmitted requests (the rate matcher's
+        backlog signal), without materializing the list."""
+        return self.queue.ready_count(self.now)
+
+    def first_ready(self) -> Optional[Request]:
+        """Oldest arrived request (requeues first) without building the
+        ready list — what FCFS admission actually consumes."""
+        return self.queue.first_ready(self.now)
 
     def pool_hardware(self) -> Dict[str, Dict[str, int]]:
         """Per-role chip-class census (heterogeneous-pool telemetry), e.g.
@@ -144,6 +331,7 @@ class Cluster:
     def _fail_engine(self, eng: Engine):
         """Re-queue everything in flight on a dead engine."""
         self.stats.engine_failures += 1
+        self._invalidate_views()    # the engine may stay pooled, unhealthy
         self.requeue_inflight(eng)
         if self.rate_matcher is not None:
             self.rate_matcher.on_failure(self, eng)
@@ -185,8 +373,9 @@ class Cluster:
         # a previous episode cut short by max_wall_s may have left queued
         # or in-flight work behind; each serve() starts clean — stale slot
         # occupants must not decode into (or complete against) this episode
-        self.queue = []
+        self.queue = AdmissionQueue()
         self.pending_insert = []
+        self._invalidate_views()    # engines may have failed between episodes
         for eng in self.engines():
             for slot in list(eng.slot_req):
                 eng.evict(slot)
@@ -229,8 +418,11 @@ class Cluster:
 
         # 1) admission + prefill: the scheduler picks per prefill-capable
         #    engine; mixed engines also need a local decode slot to admit.
-        for eng in [e for e in self.prefill_capable() if e.healthy]:
-            if eng in self.pools.get(MIXED, ()) and not eng.has_free_slot():
+        mixed = self.pools.get(MIXED, ())
+        for eng in self.prefill_capable_healthy():
+            if not eng.healthy:         # failed since the view was cached
+                continue
+            if mixed and eng in mixed and not eng.has_free_slot():
                 continue
             req = self.scheduler.select(self, eng)
             if req is None:
@@ -266,19 +458,21 @@ class Cluster:
             req._next_tok = tok
             if target is not src:
                 self.stats.transfers += 1
+                # one kv_bytes() per transferring request (an entry leaves
+                # pending on insert); caches with a precomputed nbytes
+                # answer O(1), the real cache walks its pytree once
                 self.stats.transferred_bytes += kv_bytes(cache)
             progressed = True
         self.pending_insert = still
 
         # 3) decode: every decode-capable engine advances one token per slot
-        for eng in [e for e in self.decode_capable() if e.healthy]:
+        for eng in self.decode_capable_healthy():
             progressed |= self.decode_round(eng)
 
         if not progressed and (self.queue or self.pending_insert):
             # stuck waiting on arrivals or capacity: advance virtual time
-            future = [r.arrival_t for r in self.queue
-                      if r.arrival_t > self.now]
-            self.now = min(future) if future else self.now + 1e-3
+            future = self.queue.next_future_arrival(self.now)
+            self.now = future if future is not None else self.now + 1e-3
             return True
         return progressed or bool(self.queue or self.pending_insert)
 

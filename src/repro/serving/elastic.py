@@ -78,7 +78,7 @@ class ElasticRateMatcher:
         if self._round % self.cfg.check_every:
             return
         self._drain_stragglers(orch)
-        backlog = len([r for r in orch.queue if r.arrival_t <= orch.now])
+        backlog = orch.ready_count()
         dec = [e for e in orch.decode_pool if e.healthy]
         pre = [e for e in orch.prefill_pool if e.healthy]
         occupancy = (sum(e.active for e in dec)

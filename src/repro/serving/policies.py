@@ -54,8 +54,8 @@ class FCFSScheduler:
     both legacy orchestrators hardcoded."""
 
     def select(self, cluster, engine):
-        ready = cluster.ready_requests()
-        return ready[0] if ready else None
+        # head-of-queue probe: O(1), never materializes the ready list
+        return cluster.first_ready()
 
     def run_prefill(self, cluster, engine, req):
         return engine.prefill(req.prompt)
@@ -122,7 +122,7 @@ class PrefixAffinityScheduler:
             return best
         # no affinity for this engine: leave requests whose prefix lives on a
         # *different* engine for that engine, take the oldest unaffiliated one
-        others = [e for e in cluster.prefill_capable()
+        others = [e for e in cluster.prefill_capable_healthy()
                   if e is not engine and e.healthy
                   and e.prefix_cache is not None]
         for r in ready:
@@ -168,7 +168,7 @@ class FirstFitRouter:
     orchestrator placement (packs early engines densely)."""
 
     def route(self, cluster, req, src):
-        for eng in cluster.decode_capable():
+        for eng in cluster.decode_capable_healthy():
             if eng.healthy and eng.has_free_slot():
                 return eng
         return None
@@ -182,13 +182,13 @@ class RoundRobinRouter:
         self._next = 0
 
     def route(self, cluster, req, src):
-        pool = [e for e in cluster.decode_capable() if e.healthy]
+        pool = cluster.decode_capable_healthy()
         if not pool:
             return None
         n = len(pool)
         for i in range(n):
             eng = pool[(self._next + i) % n]
-            if eng.has_free_slot():
+            if eng.healthy and eng.has_free_slot():
                 self._next = (self._next + i + 1) % n
                 return eng
         return None
@@ -199,7 +199,7 @@ class LeastLoadedRouter:
     batch pressure evenly so per-step batch sizes stay balanced."""
 
     def route(self, cluster, req, src):
-        cands = [e for e in cluster.decode_capable()
+        cands = [e for e in cluster.decode_capable_healthy()
                  if e.healthy and e.has_free_slot()]
         if not cands:
             return None
@@ -217,7 +217,7 @@ class KVLocalityRouter:
 
     def route(self, cluster, req, src):
         if (src is not None and src.healthy and src.has_free_slot()
-                and src in cluster.decode_capable()):
+                and src in cluster.decode_capable_healthy()):
             return src
         return self._fallback.route(cluster, req, src)
 

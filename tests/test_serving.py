@@ -632,6 +632,126 @@ def test_chunked_prefill_jit_wrappers_cached(params):
 
 
 # ---------------------------------------------------------------------------
+# Event-loop hot path: indexed admission queue + cached healthy views
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, arrival):
+    return Request(rid=rid, prompt=np.zeros(4, np.int32), osl=2,
+                   arrival_t=arrival)
+
+
+def test_admission_queue_matches_list_semantics():
+    """Requeues at the front (most recent first), arrivals in order,
+    O(ready) prefix scans return exactly what the old list scan did."""
+    from repro.serving.cluster import AdmissionQueue
+    q = AdmissionQueue()
+    arrivals = [_req(i, 0.1 * i) for i in range(6)]
+    for r in arrivals:
+        q.append(r)
+    # ready = arrived prefix
+    assert [r.rid for r in q.ready(0.25)] == [0, 1, 2]
+    assert q.ready_count(0.25) == 3
+    assert q.next_future_arrival(0.25) == pytest.approx(0.3)
+    # removal by identity from the middle
+    q.remove(arrivals[1])
+    assert [r.rid for r in q.ready(0.25)] == [0, 2]
+    # requeues go to the front, most recent requeue first (list.insert(0,..))
+    ra, rb = _req(100, 0.0), _req(101, 0.0)
+    q.insert(0, ra)
+    q.insert(0, rb)
+    assert [r.rid for r in q.ready(0.25)] == [101, 100, 0, 2]
+    assert [r.rid for r in q][:2] == [101, 100]
+    assert len(q) == 7              # 6 arrivals - 1 removed + 2 requeues
+    q.remove(rb)
+    assert [r.rid for r in q.ready(10.0)] == [100, 0, 2, 3, 4, 5]
+    # removing a request that is not queued raises (list.remove parity)
+    with pytest.raises(KeyError):
+        q.remove(rb)
+    # re-inserting an already-queued request moves it (single entry, so a
+    # later remove can't leave a duplicate to double-serve)
+    q.insert(0, arrivals[2])
+    assert len(q) == 6
+    assert [r.rid for r in q.ready(10.0)] == [2, 100, 0, 3, 4, 5]
+    q.remove(arrivals[2])
+    assert [r.rid for r in q.ready(10.0)] == [100, 0, 3, 4, 5]
+
+
+def test_admission_queue_future_dated_front_entry_not_ready():
+    """A front-inserted request with a future arrival (no in-repo requeue
+    does this, but the queue is public) must stay invisible to every
+    ready view until its arrival — exactly like the old list scan."""
+    from repro.serving.cluster import AdmissionQueue
+    q = AdmissionQueue()
+    q.append(_req(0, 0.2))
+    q.insert(0, _req(100, 5.0))         # staged future retry at the front
+    assert [r.rid for r in q.ready(1.0)] == [0]
+    assert q.ready_count(1.0) == 1
+    assert q.first_ready(1.0).rid == 0
+    assert q.next_future_arrival(1.0) == pytest.approx(5.0)
+    assert q.first_ready(6.0).rid == 100
+
+
+def test_admission_queue_out_of_order_append_still_correct():
+    """A non-chronological append (no Workload does this, but the queue is
+    public) downgrades scans to O(n) without changing results."""
+    from repro.serving.cluster import AdmissionQueue
+    q = AdmissionQueue()
+    for t in (0.1, 0.5, 0.3):
+        q.append(_req(int(t * 10), t))
+    assert sorted(r.rid for r in q.ready(0.35)) == [1, 3]
+    assert q.ready_count(0.35) == 2
+    assert q.next_future_arrival(0.35) == pytest.approx(0.5)
+
+
+def test_healthy_views_cached_and_invalidated(params):
+    cl = Cluster({"prefill": [mk(0, params)],
+                  "decode": [mk(1, params), mk(2, params)]})
+    v1 = cl.decode_capable_healthy()
+    assert v1 is cl.decode_capable_healthy()        # cached
+    assert len(v1) == 2
+    # pool mutation (migration / drain / failover all edit pool lists)
+    eng = cl.decode_pool[0]
+    cl.migrate(eng, cl.decode_pool, cl.prefill_pool)
+    v2 = cl.decode_capable_healthy()
+    assert v2 is not v1 and len(v2) == 1
+    assert len(cl.prefill_capable_healthy()) == 2
+    # _fail_engine invalidates even when no pool list changes
+    dead = cl.decode_pool[0]
+    dead.fail()
+    cl._fail_engine(dead)
+    assert cl.decode_capable_healthy() == []
+
+
+def test_kv_bytes_computed_at_most_once_per_request(params, monkeypatch):
+    """The transfer payload size is computed only on an actual transfer —
+    at most one pytree walk per request, none when placement is local
+    (and O(1) on the sim backend, whose caches precompute ``nbytes``)."""
+    import repro.serving.cluster as cluster_mod
+    calls = []
+    orig = cluster_mod.kv_bytes
+
+    def counting(cache):
+        calls.append(1)
+        return orig(cache)
+    monkeypatch.setattr(cluster_mod, "kv_bytes", counting)
+    reqs = gen_requests(5, seed=30, osl=3)
+    orch = disagg(params, [mk(0, params)], [mk(1, params)])
+    m = orch.run(reqs, max_wall_s=300)
+    assert m["completed"] == 5
+    assert orch.stats.transfers == 5
+    assert len(calls) == 5              # once per transferring request
+    assert orch.stats.transferred_bytes > 0
+    # local placement (mixed pool + KV locality): zero transfers -> zero
+    # pytree walks
+    calls.clear()
+    coloc = Cluster({"mixed": [mk(2, params)]}, router=KVLocalityRouter())
+    m2 = coloc.run(gen_requests(4, seed=31, osl=3), max_wall_s=300)
+    assert m2["completed"] == 4
+    assert coloc.stats.transfers == 0 and calls == []
+
+
+# ---------------------------------------------------------------------------
 # SLA metrics
 # ---------------------------------------------------------------------------
 
