@@ -11,6 +11,12 @@ the smoke configs end-to-end.
       --prefill-engines 1 --decode-engines 2 --requests 16 --isl 64 --osl 16 \
       --scheduler fcfs --router least-loaded --rate-matcher elastic \
       --workload poisson        # or burst / diurnal / sessions / a trace
+
+``--backend sim`` swaps every engine for the analytic-time ``SimEngine``
+(serving/simengine.py): the same policies and workload run ~100x faster on
+roofline-clocked O(1) steps — no params, no jit. ``--calibrate`` first
+fits the roofline scale against a short real run (persisted to
+``--calibration-path``, reused by later sim runs).
 """
 from __future__ import annotations
 
@@ -18,19 +24,17 @@ import argparse
 import json
 import sys
 
-import jax
-
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core.hardware import CHIP_NAMES, get_chip
-from repro.models import transformer as T
+from repro.serving.backends import BACKENDS, init_real_params, make_engine
 from repro.serving.cluster import Cluster
 from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
-from repro.serving.engine import Engine
 from repro.serving.policies import (ChunkedPiggybackScheduler, ElasticPolicy,
                                     FCFSScheduler, FirstFitRouter,
                                     KVLocalityRouter, LeastLoadedRouter,
                                     PrefixAffinityScheduler, PriorityScheduler,
                                     RoundRobinRouter, StaticSplitRateMatcher)
+from repro.serving.simengine import calibrate, load_calibration
 from repro.workloads import (Burst, Diurnal, FixedShape, OpenLoopWorkload,
                              Poisson, SessionWorkload, TraceReplay)
 
@@ -79,6 +83,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b",
                     help="architecture family (smoke-sized for CPU)")
+    ap.add_argument("--backend", choices=BACKENDS, default="real",
+                    help="'real' runs jit'd forwards; 'sim' runs the "
+                    "analytic-time SimEngine (no params, ~100x faster)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit (and persist) the sim roofline scale from a "
+                    "short real run before serving (--backend sim)")
+    ap.add_argument("--calibration-path", default=".sim_calibration.json",
+                    help="JSON table of per-(model, chip) roofline scales")
     ap.add_argument("--mode", choices=["disagg", "coloc"], default="disagg")
     ap.add_argument("--scheduler", choices=sorted(SCHEDULERS), default="fcfs")
     ap.add_argument("--router", choices=sorted(ROUTERS),
@@ -112,9 +124,14 @@ def main(argv=None):
     ap.add_argument("--piggyback-chunk", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.calibrate and args.backend != "sim":
+        ap.error("--calibrate fits the sim roofline scale; pass "
+                 "--backend sim with it")
 
     cfg = get_smoke_config(args.arch)
-    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    params = None
+    if args.backend == "real":          # sim serves without params
+        params = init_real_params(cfg, args.seed)
     work, expected = build_workload(args, cfg.vocab_size)
     # size engines for the workload's actual shapes (traces, growing
     # multi-turn contexts), falling back to the CLI pattern
@@ -127,9 +144,39 @@ def main(argv=None):
     chunk = (args.piggyback_chunk
              if args.scheduler == "prefix-affinity" else 0)
 
-    def mk(i, chip_name="v5e"):
-        return Engine(i, cfg, params, slots=args.slots, capacity=capacity,
-                      chunk_size=chunk, chip=get_chip(chip_name))
+    # one calibration load per distinct chip; a chip with no persisted fit
+    # runs on the raw roofline scale (announced, never silently borrowed
+    # from another chip's fit)
+    cal_by_chip = {}
+    if args.backend == "sim":
+        cal_params = None
+        if args.calibrate:      # params are chip-independent: init once
+            cal_params = init_real_params(cfg, args.seed)
+        # only the chips this mode actually builds (coloc runs one mixed
+        # pool on the prefill chip — no decode-chip engines to calibrate)
+        chips_needed = ({args.prefill_chip} if args.mode == "coloc"
+                       else {args.prefill_chip, args.decode_chip})
+        for chip_name in sorted(chips_needed):
+            if args.calibrate:
+                cal = calibrate(cfg, cal_params, chip=get_chip(chip_name),
+                                path=args.calibration_path, seed=args.seed)
+                print(f"# calibrated {cfg.name}/{chip_name}: "
+                      f"prefill x{cal.prefill_scale:.3g} "
+                      f"decode x{cal.decode_scale:.3g}", file=sys.stderr)
+            cal_by_chip[chip_name] = load_calibration(
+                args.calibration_path, cfg.name, get_chip(chip_name))
+        missing = sorted(c for c, v in cal_by_chip.items() if v is None)
+        if missing:
+            print(f"note: no calibration for {cfg.name} on "
+                  f"{'/'.join(missing)} in {args.calibration_path}; those "
+                  "engines use raw roofline scales (run --calibrate to "
+                  "fit)", file=sys.stderr)
+
+    def mk(i, chip_name):
+        return make_engine(args.backend, i, cfg, params, slots=args.slots,
+                           capacity=capacity, chunk_size=chunk,
+                           chip=get_chip(chip_name),
+                           calibration=cal_by_chip.get(chip_name))
 
     scheduler = SCHEDULERS[args.scheduler](chunk)
     sched_name = args.scheduler
@@ -183,6 +230,7 @@ def main(argv=None):
                  "hardware": cluster.pool_hardware()}
 
     print(json.dumps({"arch": cfg.name, "mode": args.mode,
+                      "backend": args.backend,
                       "workload": ("trace" if args.trace else args.workload),
                       "scheduler": sched_name,
                       "router": router_name,

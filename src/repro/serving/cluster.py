@@ -34,12 +34,15 @@ continues on the surviving pool, notifying the rate matcher for failover.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, TYPE_CHECKING, Tuple
 
 import numpy as np
 
-from repro.serving.engine import Engine, EngineFailure
+from repro.serving.common import EngineFailure
 from repro.serving.request import Request, sla_metrics
+
+if TYPE_CHECKING:       # Engine is annotation-only: the loop is backend-
+    from repro.serving.engine import Engine     # agnostic (real or sim)
 
 PREFILL, DECODE, MIXED = "prefill", "decode", "mixed"
 
@@ -199,8 +202,8 @@ class PoolStats:
 def kv_bytes(cache) -> int:
     """Size of one request's KV/state handoff payload (the Eq 1-2 hop).
     Called at most once per transferring request; caches that already
-    know their payload size expose ``nbytes`` directly and skip the
-    tensor walk."""
+    know their payload size (``SimEngine``'s bookkeeping caches) expose
+    ``nbytes`` directly and skip the tensor walk."""
     nbytes = getattr(cache, "nbytes", None)
     if nbytes is not None:
         return int(nbytes)
@@ -459,8 +462,8 @@ class Cluster:
             if target is not src:
                 self.stats.transfers += 1
                 # one kv_bytes() per transferring request (an entry leaves
-                # pending on insert); caches with a precomputed nbytes
-                # answer O(1), the real cache walks its pytree once
+                # pending on insert); SimCache answers from its nbytes
+                # field, the real backend walks its pytree once
                 self.stats.transferred_bytes += kv_bytes(cache)
             progressed = True
         self.pending_insert = still

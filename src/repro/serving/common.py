@@ -1,0 +1,82 @@
+"""Backend-agnostic serving primitives shared by the real (jit'd) and
+simulated engines.
+
+Everything here is numpy-only on purpose: the analytic-time ``SimEngine``
+(serving/simengine.py) and the whole ``Cluster`` event loop import through
+this module, so simulator-in-the-loop sweeps can fork worker processes
+without paying the jax import (the same property ``repro.sweeps`` relies
+on for the vectorized analytic path).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class EngineFailure(RuntimeError):
+    pass
+
+
+class PrefixCache:
+    """KV-cache reuse across requests sharing prompt prefixes (the paper's
+    §7 "KV cache reuse" direction, cf. Mooncake/SGLang radix caching).
+
+    Entries map a prompt-token prefix (chunk-aligned) to its KV cache; a new
+    prompt resumes chunked prefill from the longest cached prefix. The cache
+    payload is opaque — real engines store jax pytrees, ``SimEngine`` stores
+    O(1) bookkeeping records — so both backends share one policy surface."""
+
+    def __init__(self, chunk: int, max_entries: int = 16):
+        self.chunk = chunk
+        self.max_entries = max_entries
+        self._entries = []          # [(tokens_tuple, cache)], LRU order
+        self.version = 0            # bumped per insert (probe memo key)
+        self.hits = 0
+        self.hit_tokens = 0
+        self.misses = 0
+
+    def _best_match(self, prompt: np.ndarray):
+        """(entry_index, usable_prefix_len) of the longest chunk-aligned
+        *common* prefix with any cached entry, or (-1, 0)."""
+        best, best_len = -1, 0
+        pt = np.asarray(prompt)
+        for idx, (toks, _cache) in enumerate(self._entries):
+            k = np.asarray(toks)
+            m = min(len(k), len(pt))
+            neq = np.nonzero(k[:m] != pt[:m])[0]
+            common = int(neq[0]) if len(neq) else m
+            common = (common // self.chunk) * self.chunk
+            # need at least one suffix chunk left to process
+            if common >= len(pt):
+                common = len(pt) - self.chunk
+            if common > best_len:
+                best, best_len = idx, common
+        return best, best_len
+
+    def match_len(self, prompt: np.ndarray) -> int:
+        """Usable cached-prefix length without touching hit/miss stats
+        (scheduler affinity probes)."""
+        return self._best_match(prompt)[1]
+
+    def lookup(self, prompt: np.ndarray):
+        """Longest chunk-aligned common prefix with any cached entry ->
+        (cache, length) or (None, 0). Positions beyond the common prefix in
+        the reused cache are overwritten by the resumed chunked prefill and
+        causally masked meanwhile, so partial reuse is exact."""
+        idx, best_len = self._best_match(prompt)
+        if idx < 0 or best_len <= 0:
+            self.misses += 1
+            return None, 0
+        self.hits += 1
+        self.hit_tokens += best_len
+        return self._entries[idx][1], best_len
+
+    def insert(self, prompt: np.ndarray, cache):
+        n = (len(prompt) // self.chunk) * self.chunk
+        if n == 0:
+            return
+        key = tuple(int(t) for t in prompt[:n])
+        self._entries = [(t, c) for t, c in self._entries if t != key]
+        self._entries.append((key, cache))
+        if len(self._entries) > self.max_entries:
+            self._entries.pop(0)
+        self.version += 1

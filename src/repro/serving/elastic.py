@@ -30,9 +30,10 @@ things here:
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, TYPE_CHECKING
 
-from repro.serving.engine import Engine
+if TYPE_CHECKING:       # annotation-only: the matcher is backend-agnostic
+    from repro.serving.engine import Engine
 
 
 @dataclasses.dataclass

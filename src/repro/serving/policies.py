@@ -20,12 +20,15 @@ fed by a ``repro.workloads`` scenario through ``Cluster.serve``.
 from __future__ import annotations
 
 from fractions import Fraction
-from typing import Any, List, Optional, Protocol, Tuple, runtime_checkable
+from typing import (Any, List, Optional, Protocol, TYPE_CHECKING, Tuple,
+                    runtime_checkable)
 
 from repro.core.rate_matching import split_pool
 from repro.serving.elastic import ElasticConfig, ElasticRateMatcher
-from repro.serving.engine import Engine
 from repro.serving.request import Request
+
+if TYPE_CHECKING:       # annotation-only: policies drive real or sim engines
+    from repro.serving.engine import Engine
 
 
 # --------------------------------------------------------------------------

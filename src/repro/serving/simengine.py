@@ -1,0 +1,408 @@
+"""Analytic-time simulation backend: an ``Engine`` twin clocked by rooflines.
+
+``SimEngine`` mirrors the real engine's surface — ``prefill`` /
+``prefill_chunked`` / ``insert`` / ``decode_step`` plus the health,
+hardware, and telemetry attributes the ``Cluster`` loop and its policies
+consume — but every step is O(1) token bookkeeping: no params, no jit, no
+tensors. Step durations come from ``core/perf_model.py`` rooflines
+evaluated on the engine's ``ChipConfig`` (so a v5p sim engine is faster
+than a v5e one for exactly the modelled reasons), optionally rescaled by a
+``SimCalibration`` fitted against a short *real* engine run
+(``calibrate()``), so simulated FTL/TTL land in the measured regime.
+
+Why it exists: the real backend tops out at real-compute speed —
+``Cluster.serve`` advances its virtual clock with jit'd step wall times —
+which caps the executable simulator at a few requests per second and makes
+"sweep the executable simulator over hundreds of thousands of design
+points" (the paper's scale) infeasible. On this backend the same event
+loop, schedulers, routers, rate matchers, prefix caches, and failure
+injection run unchanged, ~100x faster (``benchmarks/sim_speed.py``), and
+``repro.sweeps`` can put a bounded ``serve`` episode inside every sweep
+cell (``sweeps/simulate.py``).
+
+Token streams are deterministic: each request carries a counting rng
+seeded from its prompt (O(1) — length + endpoint tokens), so replays,
+requeues after failure injection, and cross-backend schedule-parity checks
+all see identical token ids regardless of engine placement.
+
+This module is numpy-only (no jax): simulator-in-the-loop sweep workers
+fork without paying the jax import. ``calibrate()`` is the one function
+that touches the real backend, and imports it lazily.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.hardware import (ChipConfig, DEFAULT_SYSTEM, SystemConfig,
+                                 as_system, relative_speed)
+from repro.core.paper_models import perf_llm_from_config
+from repro.core.perf_model import (Mapping, PerfLLM, decode_step_perf,
+                                   prefill_perf)
+from repro.serving.common import EngineFailure, PrefixCache
+
+# counting-rng stride (Knuth's multiplicative hash constant): consecutive
+# token ids decorrelate without any per-token state beyond the counter
+_TOK_STRIDE = 2654435761
+
+
+def _token_base(prompt: np.ndarray) -> int:
+    """O(1) per-request seed: prompt length + endpoint tokens. Depends only
+    on the request, not the engine — requeues and backend swaps replay the
+    identical stream."""
+    n = len(prompt)
+    a = int(prompt[0]) if n else 0
+    b = int(prompt[-1]) if n else 0
+    return (1000003 * n + 8191 * a + 127 * b) & 0x7FFFFFFF
+
+
+@dataclasses.dataclass
+class SimCache:
+    """The KV-handoff payload, reduced to bookkeeping: resident length,
+    transfer size (precomputed — ``cluster.kv_bytes`` reads ``nbytes``
+    instead of walking tensors), and the request's token-stream seed."""
+    length: int
+    nbytes: int
+    token_base: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SimCalibration:
+    """Per-(model, chip) scale from roofline seconds to measured seconds.
+
+    The roofline is napkin-grade on purpose (datasheet peaks, modelled
+    efficiencies); a short real run anchors its absolute scale so simulated
+    latencies are comparable to measured ones. 1.0 = trust the roofline."""
+    prefill_scale: float = 1.0
+    decode_scale: float = 1.0
+
+    def key(self) -> str:       # pragma: no cover - debugging nicety
+        return f"p{self.prefill_scale:.3g}/d{self.decode_scale:.3g}"
+
+
+class SimEngine:
+    """Drop-in ``Engine`` twin: O(1) bookkeeping steps on a roofline clock.
+
+    Accepts either an executable ``ModelConfig`` (bridged through
+    ``perf_llm_from_config``) or a ``core.perf_model.PerfLLM`` directly —
+    the latter lets sweeps simulate the paper's study models (deepseek-r1,
+    llama-3.1-*) that have no executable config. ``params`` is accepted and
+    ignored so construction sites are backend-agnostic."""
+
+    backend = "sim"
+
+    def __init__(self, engine_id: int, cfg, params=None,
+                 *, slots: int = 8, capacity: int = 256,
+                 chunk_size: int = 0, chip: Optional[ChipConfig] = None,
+                 speed_factor: Optional[float] = None,
+                 calibration: Optional[SimCalibration] = None):
+        self.engine_id = engine_id
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.capacity = capacity
+        self.chunk_size = chunk_size
+        self.healthy = True
+        self.clock = 0.0
+        self.step_times: List[float] = []
+        self._slow_factor = 1.0
+        self.chip = chip
+        self.hardware = chip.name if chip is not None else "uniform"
+        default_sf = (1.0 / relative_speed(chip)
+                      if chip is not None else 1.0)
+        self.speed_factor = (speed_factor if speed_factor is not None
+                             else default_sf)
+        # the roofline already runs on the engine's own chip, so only an
+        # *explicit* speed_factor override scales times (relative to the
+        # chip's natural speed — mirrors Engine's measured-time semantics)
+        self._extra = self.speed_factor / default_sf
+        self.calibration = calibration or SimCalibration()
+
+        if isinstance(cfg, PerfLLM):
+            self._perf = cfg
+            attn_like = cfg.attention in ("gqa", "mla")
+        else:                       # executable ModelConfig (duck-typed —
+            self._perf = perf_llm_from_config(cfg)   # no jax import here)
+            attn_like = cfg.block == "attn"
+        self.vocab = int(self._perf.vocab_size)
+        self._sys: SystemConfig = (as_system(chip) if chip is not None
+                                   else DEFAULT_SYSTEM)
+        self._map = Mapping(chips=1)
+        self.prefix_cache = (PrefixCache(chunk_size)
+                             if chunk_size and attn_like else None)
+        self.cache = None           # no decode tensors on this backend
+        self._free: List[int] = list(range(slots))
+        self.slot_req: Dict[int, Any] = {}
+        self._slot_pos: Dict[int, int] = {}     # slot -> kv tokens resident
+        self._slot_tok: Dict[int, Tuple[int, int]] = {}  # slot -> (base, i)
+        self._prefill_memo: Dict[int, float] = {}
+        self._decode_memo: Dict[Tuple[int, int], float] = {}
+        self._payload = self._payload_bytes()   # constant per engine
+
+    # ---- fault/straggler injection hooks (same seams as Engine) ---------
+
+    def fail(self):
+        self.healthy = False
+
+    def slow_down(self, factor: float):
+        self._slow_factor = factor
+
+    @property
+    def capacity_weight(self) -> float:
+        return 1.0 / self.speed_factor
+
+    def _check(self):
+        if not self.healthy:
+            raise EngineFailure(f"engine {self.engine_id} is down")
+
+    def _advance(self, dt: float) -> float:
+        dt *= self._slow_factor
+        self.clock += dt
+        self.step_times.append(dt)
+        return dt
+
+    # ---- roofline clock --------------------------------------------------
+
+    def _prefill_latency(self, n_tokens: int) -> float:
+        """End-to-end roofline latency of prefilling ``n_tokens`` on one
+        chip (memoized: requests of one shape cost one evaluation)."""
+        t = self._prefill_memo.get(n_tokens)
+        if t is None:
+            t = prefill_perf(self._perf, self._map, 1, max(n_tokens, 1),
+                             self._sys).latency_s
+            self._prefill_memo[n_tokens] = t
+        return t
+
+    def _prefill_s(self, n_new: int, ctx: int = 0) -> float:
+        """Time to prefill ``n_new`` tokens given ``ctx`` already cached
+        (prefix reuse): the marginal roofline cost of the suffix."""
+        full = self._prefill_latency(ctx + n_new)
+        base = self._prefill_latency(ctx) if ctx > 0 else 0.0
+        return max(full - base, 0.0) * self.calibration.prefill_scale \
+            * self._extra
+
+    def _decode_s(self, batch: int, kv_len: int) -> float:
+        key = (batch, kv_len)
+        t = self._decode_memo.get(key)
+        if t is None:
+            t = decode_step_perf(self._perf, self._map, max(batch, 1),
+                                 max(kv_len, 1), self._sys).step_s
+            self._decode_memo[key] = t
+        return t * self.calibration.decode_scale * self._extra
+
+    def _payload_bytes(self) -> int:
+        """Handoff size of one request's cache. Mirrors the real backend,
+        whose B=1 prefill cache is allocated at engine ``capacity`` (the
+        transfer ships the padded tensors, not just the filled prefix);
+        attention-free models ship their O(1) recurrent state."""
+        per_tok = self._perf.kv_bytes_per_token()
+        if per_tok > 0:
+            return int(self.capacity * per_tok)
+        p = self._perf                      # rwkv-style state: [H, N, N]
+        state = p.num_layers * p.num_heads * p.dh * p.dh * 4
+        mixes = 2 * p.num_layers * p.d_model * p.bytes_act
+        return int(state + mixes)
+
+    # ---- prefill role ----------------------------------------------------
+
+    def _first_token(self, base: int) -> int:
+        return base % self.vocab
+
+    def prefill(self, prompt: np.ndarray) -> Tuple[int, SimCache]:
+        """Full prefill of one prompt; returns (first_token, cache)."""
+        self._check()
+        base = _token_base(prompt)
+        self._advance(self._prefill_s(len(prompt)))
+        return self._first_token(base), SimCache(
+            length=len(prompt), nbytes=self._payload, token_base=base)
+
+    def prefill_chunked(self, prompt: np.ndarray, chunk: int,
+                        on_chunk=None) -> Tuple[int, SimCache]:
+        """Chunked prefill resuming from the longest cached prefix; fires
+        ``on_chunk`` per chunk exactly like the real engine (piggyback
+        policies interleave decode rounds there). The first token matches
+        ``prefill`` — both backends derive it from the same stream."""
+        self._check()
+        S = len(prompt)
+        pad = (-S) % chunk
+        start = 0
+        if self.prefix_cache is not None:
+            _cache, start = self.prefix_cache.lookup(prompt)
+        base = _token_base(prompt)
+        self._advance(self._prefill_s(S - start + pad, ctx=start))
+        cache = SimCache(length=S, nbytes=self._payload, token_base=base)
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(prompt, cache)
+        if on_chunk:
+            n = (S - start + pad) // chunk
+            for i in range(n):
+                on_chunk(i, max(n, 1))
+        return self._first_token(base), cache
+
+    # ---- decode role -----------------------------------------------------
+
+    def has_free_slot(self) -> bool:
+        return bool(self._free)
+
+    @property
+    def active(self) -> int:
+        return len(self.slot_req)
+
+    def insert(self, req, cache: SimCache) -> int:
+        """KV handoff: pure bookkeeping (the modelled transfer cost lives
+        in ``core/kv_transfer.py``; the real backend's jit'd scatter is a
+        host-side stand-in, not a modelled quantity)."""
+        self._check()
+        slot = self._free.pop()
+        self.slot_req[slot] = req
+        self._slot_pos[slot] = cache.length
+        # resume the counting stream where the request's output left off
+        self._slot_tok[slot] = (cache.token_base, len(req.output))
+        req.slot = slot
+        req.engine_id = self.engine_id
+        return slot
+
+    def evict(self, slot: int):
+        req = self.slot_req.pop(slot, None)
+        if req is not None:
+            req.slot = None
+        self._slot_pos.pop(slot, None)
+        self._slot_tok.pop(slot, None)
+        self._free.append(slot)
+
+    def decode_step(self, tokens_by_slot: Dict[int, int]) -> Dict[int, int]:
+        """One token for every active slot. Batch size and mean resident
+        context feed the decode roofline; token ids advance each request's
+        counting rng."""
+        self._check()
+        b = len(self.slot_req)
+        kv = int(round(sum(self._slot_pos[s] for s in self.slot_req)
+                       / max(b, 1)))
+        self._advance(self._decode_s(b, kv))
+        out = {}
+        for s in tokens_by_slot:
+            base, i = self._slot_tok[s]
+            out[s] = (base + i * _TOK_STRIDE) % self.vocab
+            self._slot_tok[s] = (base, i + 1)
+            self._slot_pos[s] += 1
+        return out
+
+    @property
+    def mean_step_s(self) -> float:
+        if not self.step_times:
+            return 0.0
+        return float(np.mean(self.step_times[-50:]))
+
+
+# ---------------------------------------------------------------------------
+# calibration: fit the roofline scale against a short real-engine run
+
+
+def calibration_key(model_name: str, chip: Optional[ChipConfig]) -> str:
+    return f"{model_name}/{chip.name if chip is not None else 'uniform'}"
+
+
+def load_calibration(path: str, model_name: str,
+                     chip: Optional[ChipConfig] = None
+                     ) -> Optional[SimCalibration]:
+    """Fetch a persisted fit, or None (callers fall back to the raw
+    roofline — scale 1.0)."""
+    try:
+        with open(path) as f:
+            table = json.load(f)
+    except (OSError, ValueError):
+        return None
+    rec = table.get(calibration_key(model_name, chip))
+    if rec is None:
+        return None
+    return SimCalibration(prefill_scale=float(rec["prefill_scale"]),
+                          decode_scale=float(rec["decode_scale"]))
+
+
+def save_calibration(path: str, model_name: str,
+                     chip: Optional[ChipConfig],
+                     cal: SimCalibration, meta: Optional[dict] = None
+                     ) -> None:
+    """Merge one fit into the JSON table at ``path`` (atomic replace)."""
+    table: Dict[str, dict] = {}
+    try:
+        with open(path) as f:
+            table = json.load(f)
+    except (OSError, ValueError):
+        pass
+    table[calibration_key(model_name, chip)] = {
+        "prefill_scale": cal.prefill_scale,
+        "decode_scale": cal.decode_scale, **(meta or {})}
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d)
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(table, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def calibrate(cfg, params=None, *, chip: Optional[ChipConfig] = None,
+              isl: int = 48, osl: int = 8, batch: int = 2,
+              n_prompts: int = 3, seed: int = 0,
+              path: Optional[str] = None) -> SimCalibration:
+    """Fit a per-(model, chip) ``SimCalibration`` from a short real run.
+
+    Runs ``n_prompts`` prefills and ``osl`` batched decode steps on a real
+    ``Engine`` (first of each excluded — jit compilation), predicts the
+    same steps with the roofline, and returns measured/predicted scales.
+    ``path`` persists the fit for later sessions
+    (``load_calibration``). This is the one sim-path function that imports
+    jax; everything else stays host-cheap."""
+    from repro.serving.backends import init_real_params
+    from repro.serving.engine import Engine
+    from repro.serving.request import Request
+
+    if params is None:
+        params = init_real_params(cfg, seed)
+    capacity = isl + osl + 8
+    eng = Engine(0, cfg, params, slots=max(batch, 1), capacity=capacity,
+                 chip=chip)
+    sim = SimEngine(1, cfg, slots=max(batch, 1), capacity=capacity,
+                    chip=chip)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, sim.vocab, isl).astype(np.int32)
+               for _ in range(n_prompts + 1)]
+    caches = []
+    for p in prompts:
+        _tok, cache = eng.prefill(p)
+        caches.append(cache)
+    measured_p = float(np.mean(eng.step_times[1:]))     # [0] = jit compile
+    predicted_p = sim._prefill_latency(isl)
+
+    n0 = len(eng.step_times)
+    for i, cache in enumerate(caches[:batch]):
+        eng.insert(Request(rid=i, prompt=prompts[i], osl=osl), cache)
+    toks = {s: 1 for s in eng.slot_req}
+    for _ in range(osl):
+        toks = eng.decode_step(toks)
+    dec_steps = eng.step_times[n0:]
+    measured_d = float(np.mean(dec_steps[1:] if len(dec_steps) > 1
+                               else dec_steps))
+    # the measured steps decode with context growing isl -> isl + osl, so
+    # predict at the mean resident length (predicting at isl would bias
+    # decode_scale high by ~osl/2 extra context per step)
+    predicted_d = decode_step_perf(sim._perf, sim._map, max(batch, 1),
+                                   isl + osl // 2, sim._sys).step_s
+
+    cal = SimCalibration(
+        prefill_scale=measured_p / max(predicted_p, 1e-12),
+        decode_scale=measured_d / max(predicted_d, 1e-12))
+    if path is not None:
+        save_calibration(path, getattr(cfg, "name", "model"), chip, cal,
+                         meta={"isl": isl, "osl": osl, "batch": batch,
+                               "n_prompts": n_prompts})
+    return cal
