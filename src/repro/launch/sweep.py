@@ -30,7 +30,8 @@ def build_spec(args) -> SweepSpec:
         models=args.models, hardware=args.hardware, isl=args.isl,
         osl=args.osl, reuse=args.reuse, modes=args.modes,
         ttl_targets=args.ttl_targets, ftl_cutoff=args.ftl_cutoff,
-        max_chips=args.max_chips)
+        max_chips=args.max_chips, simulate=args.simulate,
+        sim_requests=args.sim_requests)
 
 
 def main(argv=None):
@@ -51,6 +52,12 @@ def main(argv=None):
     ap.add_argument("--ttl-targets", type=int, default=24)
     ap.add_argument("--ftl-cutoff", type=float, default=10.0)
     ap.add_argument("--max-chips", type=int, default=None)
+    ap.add_argument("--simulate", action="store_true",
+                    help="run a bounded Cluster.serve episode on the "
+                    "SimEngine backend per cell (sla_metrics columns next "
+                    "to the analytic records)")
+    ap.add_argument("--sim-requests", type=int, default=24,
+                    help="requests per simulated episode (--simulate)")
     ap.add_argument("--store", default=".sweeps",
                     help="store root directory (content-addressed)")
     ap.add_argument("--format", choices=["jsonl", "parquet"],
@@ -62,7 +69,8 @@ def main(argv=None):
     ap.add_argument("--no-resume", action="store_true",
                     help="recompute every cell even if its shard exists")
     ap.add_argument("--query", choices=["frontier", "best-hardware",
-                                        "sensitivity"], default=None,
+                                        "sensitivity", "sim-delta"],
+                    default=None,
                     help="after the run, print this query instead of the "
                     "run report")
     ap.add_argument("--weight", choices=["chip", "cost"], default="chip")
@@ -85,6 +93,8 @@ def main(argv=None):
             out = {"best_hardware": [
                 {"prefill": p, "decode": d, "area": a}
                 for (p, d), a in res.best_hardware(weight=args.weight)]}
+        elif args.query == "sim-delta":
+            out = {"sim_delta": res.sim_delta(weight=args.weight)}
         else:
             out = {"sensitivity": res.sensitivity(args.axis,
                                                   weight=args.weight)}

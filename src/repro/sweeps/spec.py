@@ -58,9 +58,17 @@ class SweepCell:
     ttl_targets: int
     ftl_cutoff: float
     max_chips: Optional[int]
+    # simulator-in-the-loop: run a bounded Cluster.serve episode on
+    # SimEngines next to the analytic evaluation (sweeps/simulate.py)
+    simulate: bool = False
+    sim_requests: int = 0
 
     def canonical(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if not self.simulate:       # hash-compatible with pre-sim cells:
+            del d["simulate"]       # analytic-only shards keep their ids
+            del d["sim_requests"]
+        return d
 
     def cell_id(self) -> str:
         """Content address of this cell — independent of the enclosing
@@ -87,6 +95,10 @@ class SweepSpec:
     ttl_targets: int = 24
     ftl_cutoff: float = 10.0
     max_chips: Optional[int] = None
+    # simulator-in-the-loop axis: each cell additionally runs a bounded
+    # Cluster.serve episode on SimEngines and records sla_metrics columns
+    simulate: bool = False
+    sim_requests: int = 24
 
     @classmethod
     def create(cls, models: Sequence[str],
@@ -95,7 +107,9 @@ class SweepSpec:
                reuse: Sequence[float] = (0.0,),
                modes: Sequence[str] = ("disagg",),
                ttl_targets: int = 24, ftl_cutoff: float = 10.0,
-               max_chips: Optional[int] = None) -> "SweepSpec":
+               max_chips: Optional[int] = None,
+               simulate: bool = False,
+               sim_requests: int = 24) -> "SweepSpec":
         pairs = sorted({_canon_pair(h) for h in hardware})
         assert pairs, "need at least one hardware entry"
         assert models, "need at least one model"
@@ -104,6 +118,8 @@ class SweepSpec:
         for r in reuse:
             assert 0.0 <= r < 1.0, f"reuse_fraction in [0, 1): {r}"
         assert ttl_targets >= 1 and ftl_cutoff > 0
+        assert not simulate or sim_requests >= 1, \
+            "simulate=True needs sim_requests >= 1"
         return cls(models=tuple(sorted(set(models))),
                    hardware=tuple(pairs),
                    isl=tuple(sorted(set(int(i) for i in isl))),
@@ -112,13 +128,18 @@ class SweepSpec:
                    modes=tuple(sorted(set(modes))),
                    ttl_targets=int(ttl_targets),
                    ftl_cutoff=float(ftl_cutoff),
-                   max_chips=max_chips)
+                   max_chips=max_chips,
+                   simulate=bool(simulate),
+                   sim_requests=int(sim_requests))
 
     # -- serialization ------------------------------------------------------
 
     def canonical(self) -> dict:
         d = dataclasses.asdict(self)
         d["hardware"] = [list(p) for p in self.hardware]
+        if not self.simulate:       # analytic-only specs hash as before
+            del d["simulate"]
+            del d["sim_requests"]
         return d
 
     def to_json(self) -> str:
@@ -132,7 +153,9 @@ class SweepSpec:
             modes=d.get("modes", ("disagg",)),
             ttl_targets=d.get("ttl_targets", 24),
             ftl_cutoff=d.get("ftl_cutoff", 10.0),
-            max_chips=d.get("max_chips"))
+            max_chips=d.get("max_chips"),
+            simulate=d.get("simulate", False),
+            sim_requests=d.get("sim_requests", 24))
 
     def spec_hash(self) -> str:
         blob = json.dumps(self.canonical(), sort_keys=True,
@@ -168,7 +191,10 @@ class SweepSpec:
                                     isl=isl, osl=osl, reuse=reuse,
                                     ttl_targets=self.ttl_targets,
                                     ftl_cutoff=self.ftl_cutoff,
-                                    max_chips=self.max_chips)
+                                    max_chips=self.max_chips,
+                                    simulate=self.simulate,
+                                    sim_requests=(self.sim_requests
+                                                  if self.simulate else 0))
                                 cid = cell.cell_id()
                                 if cid not in seen:
                                     seen.add(cid)

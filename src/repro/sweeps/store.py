@@ -186,7 +186,12 @@ class SweepStore:
         md = table.schema.metadata or {}
         if b"sweep_meta" in md:
             meta = json.loads(md[b"sweep_meta"].decode())
-        records = table.to_pylist()
+        # the writer unions columns across heterogeneous rows (analytic vs
+        # sim records in one shard) and fills gaps with null; drop those so
+        # a parquet round-trip yields the same dicts JSONL does (readers
+        # key on field *absence* — e.g. records() kind normalization)
+        records = [{k: v for k, v in row.items() if v is not None}
+                   for row in table.to_pylist()]
         return records, meta
 
 

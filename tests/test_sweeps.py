@@ -417,6 +417,125 @@ def test_arch_ids_resolve_in_sweeps():
 
 
 # ---------------------------------------------------------------------------
+# simulator-in-the-loop axis (SimEngine episodes behind the same store)
+
+
+def test_simulate_axis_hash_compat_and_distinct():
+    """Adding the simulate axis must not move analytic spec hashes or cell
+    ids (every persisted shard stays addressable); simulate=True addresses
+    different work, so it hashes apart."""
+    plain, simmed = _tiny_spec(), _tiny_spec(simulate=True)
+    assert "simulate" not in plain.canonical()
+    assert "simulate" not in plain.cells()[0].canonical()
+    assert simmed.canonical()["simulate"] is True
+    assert plain.spec_hash() != simmed.spec_hash()
+    assert plain.cells()[0].cell_id() != simmed.cells()[0].cell_id()
+    assert SweepSpec.from_dict(simmed.canonical()) == simmed
+    # sim_requests is part of the address (different episode = new cell)
+    assert _tiny_spec(simulate=True, sim_requests=8).spec_hash() \
+        != simmed.spec_hash()
+
+
+def test_simulate_cell_records_sla_columns_deterministically():
+    from repro.sweeps.simulate import simulate_cell
+    cell = _tiny_spec(simulate=True, sim_requests=8).cells()[0]
+    assert cell.simulate and cell.sim_requests == 8
+    recs = simulate_cell(cell)
+    assert len(recs) == 1
+    r = recs[0]
+    assert r["kind"] == "sim"
+    assert r["completed"] == 8
+    assert r["tput_per_chip"] > 0 and r["tput_per_dollar"] > 0
+    assert r["p50_ftl_s"] > 0 and r["p50_ttl_s"] > 0
+    assert r["tps_per_user"] == pytest.approx(1.0 / r["p50_ttl_s"])
+    # deterministic: the shard bytes are a pure function of the cell
+    assert simulate_cell(cell) == recs
+
+
+def test_simulate_cell_reuse_hits_prefix_cache_and_speeds_prefill():
+    spec = _tiny_spec(simulate=True, sim_requests=8, reuse=[0.0, 0.5])
+    from repro.sweeps.simulate import simulate_cell
+    cells = {c.reuse: c for c in spec.cells()
+             if (c.prefill_chip, c.decode_chip) ==
+             ("tpu-v5e", "tpu-v5e")}
+    cold = simulate_cell(cells[0.0])[0]
+    warm = simulate_cell(cells[0.5])[0]
+    assert cold["cache_hit_tokens"] == 0 and cold["reuse_via"] == "none"
+    assert warm["cache_hit_tokens"] > 0
+    assert warm["reuse_via"] == "prefix_cache"
+    assert warm["p50_ftl_s"] < cold["p50_ftl_s"]
+
+
+def test_simulate_cell_cacheless_family_gets_effective_isl_discount():
+    """rwkv/hybrid engines carry no PrefixCache (matching the real
+    backend), so the reuse axis must flow through the analytic
+    effective-ISL contract instead of being silently ignored."""
+    from repro.sweeps.simulate import simulate_cell
+    spec = _tiny_spec(models=["rwkv6-1.6b"], simulate=True, sim_requests=6,
+                      reuse=[0.0, 0.5])
+    cells = {c.reuse: c for c in spec.cells()
+             if (c.prefill_chip, c.decode_chip) ==
+             ("tpu-v5e", "tpu-v5e")}
+    cold = simulate_cell(cells[0.0])[0]
+    warm = simulate_cell(cells[0.5])[0]
+    assert warm["reuse_via"] == "effective_isl"
+    assert warm["cache_hit_tokens"] == 0          # no cache to hit
+    assert warm["p50_ftl_s"] < cold["p50_ftl_s"]  # discount still lands
+
+
+def test_simulate_sweep_cache_hit_and_result_views(tmp_path):
+    spec = _tiny_spec(simulate=True, sim_requests=8,
+                      modes=["disagg", "coloc"])
+    store = SweepStore(str(tmp_path / "s"))
+    r1 = run_sweep(spec, store)
+    assert r1.cells_run == r1.cells_total > 0
+    assert any(k.endswith("/sim") for k in r1.frontier_areas)
+    r2 = run_sweep(spec, store)
+    assert r2.cells_run == 0 and r2.cells_cached == r1.cells_total
+    assert r2.frontier_areas == r1.frontier_areas
+
+    res = SweepResult(store, spec)
+    sims = res.sim_records()
+    # one sim row per cell, next to the analytic rows in the same shards
+    assert len(sims) == r1.cells_total
+    assert all(r["kind"] == "sim" for r in sims)
+    assert len(res.records()) == len(sims) + len(res.records(
+        kind="analytic"))
+    # the analytic frontier must not absorb simulated points
+    assert res.frontier(mode="disagg") == res.frontier(
+        mode="disagg", kind="analytic")
+    assert res.sim_frontier(mode="disagg")
+    # sim helpers tolerate (and override) an explicit kind filter
+    assert res.sim_records(kind="analytic") == sims
+    assert res.sim_frontier(kind="sim") == res.sim_frontier()
+    deltas = res.sim_delta(mode="disagg")
+    assert len(deltas) == len(res.sim_records(mode="disagg"))
+    for d in deltas:
+        assert d["analytic_tput_per_chip"] > 0
+        # the analytic envelope (ideal rate matching, full chips axis)
+        # upper-bounds the small executable fleet
+        assert 0 < d["ratio"] < 1.0
+    assert res.summary()["sim_records"] == len(sims)
+
+
+def test_simulate_sweep_parquet_roundtrip_keeps_kind_absence(tmp_path):
+    """A mixed analytic+sim shard through parquet unions columns and
+    null-fills gaps; the reader must drop those nulls so kind filtering
+    (and every absent-field contract) matches the JSONL behavior."""
+    store = SweepStore(str(tmp_path / "p"), fmt="parquet")
+    if store.fmt != "parquet":
+        pytest.skip("pyarrow not available")
+    spec = _tiny_spec(simulate=True, sim_requests=8, reuse=[0.0])
+    run_sweep(spec, store)
+    res = SweepResult(store, spec)
+    analytic = res.records(kind="analytic")
+    assert analytic and all("kind" not in r for r in analytic)
+    assert res.frontier()            # analytic frontier survives round-trip
+    for d in res.sim_delta():
+        assert d["analytic_tput_per_chip"] > 0 and 0 < d["ratio"] < 1.0
+
+
+# ---------------------------------------------------------------------------
 # golden: end-to-end frontier records byte-stable across runs/platforms
 
 
