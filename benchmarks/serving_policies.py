@@ -101,14 +101,13 @@ def hetero_comparison(args, cfg, params, mk_engine):
 
 def main(argv=None) -> None:
     sys.path.insert(0, "src")
-    import jax
     import numpy as np
 
     from repro.core.hardware import CHIP_NAMES, get_chip
-    from repro.models import transformer as T
     from repro.models.config import ModelConfig
+    from repro.serving.backends import (BACKENDS, init_real_params,
+                                        make_engine)
     from repro.serving.cluster import Cluster
-    from repro.serving.engine import Engine
     from repro.serving.policies import (FCFSScheduler, KVLocalityRouter,
                                         LeastLoadedRouter,
                                         PrefixAffinityScheduler,
@@ -134,13 +133,16 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweeps (CI): smaller chip budget, fewer "
                     "TTL targets, shorter bursts")
+    ap.add_argument("--backend", choices=BACKENDS, default="real",
+                    help="engine backend: jit'd forwards or the "
+                    "analytic-time SimEngine (~100x faster episodes)")
     args = ap.parse_args(argv)
 
     cfg = ModelConfig(name="bench-tiny", family="dense", num_layers=2,
                       d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
                       vocab_size=97, remat=False, logits_chunk=32,
                       dtype="float32")
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    params = (init_real_params(cfg) if args.backend == "real" else None)
     CHUNK = 8
 
     def workload(name):
@@ -163,8 +165,9 @@ def main(argv=None) -> None:
         raise ValueError(name)
 
     def mk_engine(i, chip_name, chunk=CHUNK):
-        return Engine(i, cfg, params, slots=4, capacity=256,
-                      chunk_size=chunk, chip=get_chip(chip_name))
+        return make_engine(args.backend, i, cfg, params, slots=4,
+                           capacity=256, chunk_size=chunk,
+                           chip=get_chip(chip_name))
 
     def fleet():
         pre = [mk_engine(i, args.prefill_chip) for i in range(1)]

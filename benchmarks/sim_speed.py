@@ -1,0 +1,130 @@
+"""Backend speed benchmark: the identical workload on real vs sim engines.
+
+Serves one seeded workload through two identical ``Cluster`` fleets — jit'd
+``Engine``s and analytic-time ``SimEngine``s — and compares wall-clock
+requests/s. Asserts the simulation backend clears a >=50x floor (measured:
+~100-1000x depending on host), checks schedule parity (admission order,
+transfers, per-request token counts — the schedules must be *identical*,
+only the clocks differ), and emits ``BENCH_sim.json``:
+
+  PYTHONPATH=src python benchmarks/sim_speed.py             # full
+  PYTHONPATH=src python benchmarks/sim_speed.py --smoke     # CI
+
+The real fleet is warmed with one serve episode first so jit compilation
+is excluded from its measured wall time — the floor is against the real
+backend at its best.
+"""
+import argparse
+import json
+import sys
+import time
+
+SPEEDUP_FLOOR = 50.0
+
+
+def main(argv=None):
+    sys.path.insert(0, "src")
+    import jax
+
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+    from repro.serving.backends import make_engine
+    from repro.serving.cluster import Cluster
+    from repro.workloads import Burst, FixedShape, OpenLoopWorkload, Recorder
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_sim.json",
+                    help="artifact path; '-' disables")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="burst size (default 24, smoke 8)")
+    ap.add_argument("--isl", type=int, default=128)
+    ap.add_argument("--osl", type=int, default=16)
+    ap.add_argument("--floor", type=float, default=SPEEDUP_FLOOR,
+                    help="minimum sim/real requests-per-second ratio")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload for CI")
+    args = ap.parse_args(argv)
+    n = args.requests or (8 if args.smoke else 24)
+
+    # big enough that the real backend does real work per step; the sim
+    # backend's cost is workload-shape-independent bookkeeping
+    cfg = ModelConfig(name="sim-bench", family="dense", num_layers=4,
+                      d_model=256, num_heads=8, num_kv_heads=4, d_ff=1024,
+                      vocab_size=1024, remat=False, logits_chunk=256,
+                      dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    capacity = args.isl + args.osl + 8
+
+    def fleet(backend, base=0):
+        def eng(i):
+            return make_engine(backend, i, cfg,
+                               params if backend == "real" else None,
+                               slots=4, capacity=capacity)
+        return Cluster({"prefill": [eng(base)],
+                        "decode": [eng(base + 1), eng(base + 2)]})
+
+    def workload():
+        return Recorder(OpenLoopWorkload(
+            Burst(n, at=0.0), FixedShape(args.isl, args.osl),
+            vocab=cfg.vocab_size, seed=0))
+
+    def run(backend, warm=False):
+        cl = fleet(backend)
+        if warm:                        # compile every jit shape off-clock
+            cl.serve(workload(), max_wall_s=600)
+        transfers0 = cl.stats.transfers     # exclude the warm-up episode
+        work = workload()
+        t0 = time.perf_counter()
+        metrics = cl.serve(work, max_wall_s=600)
+        wall = time.perf_counter() - t0
+        assert metrics["completed"] == n, (backend, metrics)
+        emitted = sorted(work.emitted, key=lambda r: r.rid)
+        order = [r.rid for r in sorted(
+            emitted, key=lambda r: (r.prefill_start_t, r.rid))]
+        return {
+            "wall_s": round(wall, 6),
+            "rps": round(n / wall, 3),
+            "completed": n,
+            "virtual_tokens_per_s": round(metrics["tokens_per_s"], 3),
+            "p50_ftl_s": round(metrics["p50_ftl_s"], 6),
+        }, order, cl.stats.transfers - transfers0, \
+            {r.rid: len(r.output) for r in emitted}
+
+    real, order_r, transfers_r, counts_r = run("real", warm=True)
+    sim, order_s, transfers_s, counts_s = run("sim")
+
+    parity = {
+        "admission_order_equal": order_r == order_s,
+        "transfers_equal": transfers_r == transfers_s,
+        "token_counts_equal": counts_r == counts_s,
+    }
+    speedup = sim["rps"] / real["rps"]
+    report = {
+        "bench": "sim_speed",
+        "smoke": bool(args.smoke),
+        "model": cfg.name,
+        "workload": {"requests": n, "isl": args.isl, "osl": args.osl,
+                     "arrivals": "burst"},
+        "real": real,
+        "sim": sim,
+        "speedup": round(speedup, 2),
+        "floor": args.floor,
+        "parity": parity,
+    }
+    print(json.dumps(report, indent=1))
+    if args.out != "-":
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {args.out}")
+
+    assert all(parity.values()), f"backend schedules diverged: {parity}"
+    assert speedup >= args.floor, (
+        f"SimEngine speedup {speedup:.1f}x below the {args.floor:.0f}x "
+        f"floor (real {real['rps']:.1f} rps vs sim {sim['rps']:.1f} rps)")
+    print(f"# OK: sim {sim['rps']:.0f} rps vs real {real['rps']:.1f} rps "
+          f"-> {speedup:.0f}x (floor {args.floor:.0f}x)")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -81,4 +81,46 @@ print("sweep smoke OK: %d cells cached on rerun, smoke speedup %.1fx"
       % (r2["cells_cached"], d["speedup"]))
 PY
 
+echo "== sim backend (smoke) =="
+rm -f BENCH_sim.json
+python benchmarks/sim_speed.py --smoke > /dev/null
+python - <<'PY'
+import json, sys
+try:
+    with open("BENCH_sim.json") as f:
+        d = json.load(f)
+except FileNotFoundError:
+    sys.exit("BENCH_sim.json missing: sim benchmark did not emit it")
+required = {"bench", "smoke", "model", "workload", "real", "sim",
+            "speedup", "floor", "parity"}
+missing = required - set(d)
+assert not missing, f"BENCH_sim.json missing keys: {sorted(missing)}"
+assert d["floor"] >= 50.0 and d["speedup"] >= d["floor"], d
+assert all(d["parity"].values()), f"schedules diverged: {d['parity']}"
+for side in ("real", "sim"):
+    assert d[side]["completed"] > 0 and d[side]["rps"] > 0, d[side]
+print("BENCH_sim.json OK: sim backend %.0fx over real (floor %.0fx)"
+      % (d["speedup"], d["floor"]))
+PY
+
+echo "== simulator-in-the-loop sweep (smoke) =="
+SIM_SWEEP_ARGS=(--models llama-3.1-8b --hardware v5e --isl 256 --osl 32
+    --reuse 0.0 0.5 --modes disagg coloc --ttl-targets 4 --max-chips 8
+    --simulate --sim-requests 8 --store "$SWEEP_STORE/sim" --quiet)
+python -m repro.launch.sweep "${SIM_SWEEP_ARGS[@]}" > /tmp/simsweep_run1.json
+python -m repro.launch.sweep "${SIM_SWEEP_ARGS[@]}" > /tmp/simsweep_run2.json
+python - <<'PY'
+import json
+r1 = json.load(open("/tmp/simsweep_run1.json"))
+r2 = json.load(open("/tmp/simsweep_run2.json"))
+assert r1["cells_run"] == r1["cells_total"] > 0, r1
+assert r2["cells_run"] == 0 and r2["cells_cached"] == r1["cells_total"], \
+    f"second simulate sweep was not a full cache hit: {r2}"
+assert r2["frontier_areas"] == r1["frontier_areas"]
+sim_areas = [k for k in r1["frontier_areas"] if k.endswith("/sim")]
+assert sim_areas, f"no simulated frontier areas: {r1['frontier_areas']}"
+print("simulate sweep OK: %d cells cached on rerun, sim areas %s"
+      % (r2["cells_cached"], sim_areas))
+PY
+
 echo "CI OK"
