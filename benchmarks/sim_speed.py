@@ -3,9 +3,11 @@
 Serves one seeded workload through two identical ``Cluster`` fleets — jit'd
 ``Engine``s and analytic-time ``SimEngine``s — and compares wall-clock
 requests/s. Asserts the simulation backend clears a >=50x floor (measured:
-~100-1000x depending on host), checks schedule parity (admission order,
-transfers, per-request token counts — the schedules must be *identical*,
-only the clocks differ), and emits ``BENCH_sim.json``:
+~100-1000x depending on host), checks schedule parity via the
+``repro.analysis`` sanitizer (admission order, transfers, per-request
+stream lengths real-vs-sim, byte-identical token streams sim-vs-sim —
+the schedules must be *identical*, only the clocks differ), and emits
+``BENCH_sim.json``:
 
   PYTHONPATH=src python benchmarks/sim_speed.py             # full
   PYTHONPATH=src python benchmarks/sim_speed.py --smoke     # CI
@@ -60,8 +62,11 @@ def main(argv=None):
             return make_engine(backend, i, cfg,
                                params if backend == "real" else None,
                                slots=4, capacity=capacity)
+        # sanitize: invariants checked online, and the sanitizers carry the
+        # per-request stream tables the parity checks below compare
         return Cluster({"prefill": [eng(base)],
-                        "decode": [eng(base + 1), eng(base + 2)]})
+                        "decode": [eng(base + 1), eng(base + 2)]},
+                       sanitize=True)
 
     def workload():
         return Recorder(OpenLoopWorkload(
@@ -87,16 +92,30 @@ def main(argv=None):
             "completed": n,
             "virtual_tokens_per_s": round(metrics["tokens_per_s"], 3),
             "p50_ftl_s": round(metrics["p50_ftl_s"], 6),
-        }, order, cl.stats.transfers - transfers0, \
-            {r.rid: len(r.output) for r in emitted}
+        }, order, cl.stats.transfers - transfers0, cl.sanitizer
 
-    real, order_r, transfers_r, counts_r = run("real", warm=True)
-    sim, order_s, transfers_s, counts_s = run("sim")
+    from repro.analysis.sanitizer import SanitizerError, assert_stream_parity
+
+    real, order_r, transfers_r, san_r = run("real", warm=True)
+    sim, order_s, transfers_s, san_s = run("sim")
+    _, _, _, san_s2 = run("sim")    # replay: same backend, same workload
+
+    def streams_equal(a, b, content):
+        try:
+            assert_stream_parity(a, b, content=content)
+            return True
+        except SanitizerError as e:
+            print(f"# stream parity: {e}", file=sys.stderr)
+            return False
 
     parity = {
         "admission_order_equal": order_r == order_s,
         "transfers_equal": transfers_r == transfers_s,
-        "token_counts_equal": counts_r == counts_s,
+        # real vs sim agree on schedules (stream lengths); token *ids* are
+        # only comparable within a backend, checked by the sim replay
+        "token_counts_equal": streams_equal(san_r, san_s, content=False),
+        "sim_replay_streams_equal": streams_equal(san_s, san_s2,
+                                                  content=True),
     }
     speedup = sim["rps"] / real["rps"]
     report = {

@@ -8,6 +8,21 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+echo "== lint: repro.analysis (layering + determinism + hash pins) =="
+python -m repro.analysis --json > /tmp/analysis.json \
+    || { cat /tmp/analysis.json; exit 1; }
+python - <<'PY'
+import json
+d = json.load(open("/tmp/analysis.json"))
+assert d["ok"] and not d["violations"], d["violations"]
+print("repro.analysis OK: %d modules checked, %d baselined finding(s)"
+      % (d["checked_modules"], len(d["baselined"])))
+PY
+
+echo "== lint: sanitizer-enabled serving loop =="
+REPRO_SANITIZE=1 python -m pytest -q \
+    tests/test_simengine.py::test_sim_failure_requeues_and_replays_identically
+
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 

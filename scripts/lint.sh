@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Architecture & determinism lint: wraps `python -m repro.analysis`
+# (import-graph layering, determinism hazards, SweepSpec hash stability).
+#
+#   scripts/lint.sh                    # human-readable report, exit 1 on
+#                                      # any finding not in the baseline
+#   scripts/lint.sh --json             # machine-readable (CI)
+#   scripts/lint.sh --write-baseline   # accept current findings
+#
+# Policy and baseline live next to the package:
+# src/repro/analysis/{policy.json,baseline.json}.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m repro.analysis "$@"

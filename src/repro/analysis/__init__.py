@@ -1,0 +1,42 @@
+"""repro.analysis — architecture & determinism enforcement for the repo.
+
+The paper's conclusions rest on sweeping huge design grids whose results
+must be reproducible and comparable; this repo's equivalents — byte-stable
+``SweepStore`` shards, schedule parity between the real and sim backends,
+and a jax-free serving runtime — are ROADMAP Invariants. This package
+machine-checks them instead of trusting convention:
+
+  - ``imports``      AST import-graph checker: layering rules from a
+                     checked-in policy (``policy.json``) — the serving
+                     runtime / workloads / sweeps must not import jax
+                     outside ``TYPE_CHECKING`` or function bodies, core
+                     and kernels must not import the serving layer;
+  - ``determinism``  linter for reproducibility hazards: unseeded rngs,
+                     wall-clock reads, set-iteration-order leaks into
+                     serialized output, builtin ``sum`` in frontier-area
+                     accumulation;
+  - ``hashstab``     pins ``SweepSpec``/``SweepCell`` content hashes so
+                     new spec fields must canonicalize away at defaults
+                     (old shards stay cache hits);
+  - ``sanitizer``    an opt-in runtime monitor for the ``Cluster`` event
+                     loop (``Cluster(sanitize=True)`` or
+                     ``REPRO_SANITIZE=1``): virtual-time monotonicity,
+                     lifecycle ordering, request conservation, one
+                     prefill per engine per round, and per-request
+                     token-stream hashes for cross-backend parity.
+
+Known-accepted static findings live in ``baseline.json``; CI fails only
+on growth. CLI: ``python -m repro.analysis [--json]`` (wrapped by
+``scripts/lint.sh``); see docs/analysis.md.
+
+This package is dependency-light on purpose (stdlib + the repo modules a
+check targets): it must run before anything heavyweight imports.
+"""
+from repro.analysis.report import (AnalysisResult, Violation, load_baseline,
+                                   write_baseline)
+from repro.analysis.sanitizer import (ClusterSanitizer, SanitizerError,
+                                      assert_stream_parity)
+
+__all__ = ["AnalysisResult", "Violation", "ClusterSanitizer",
+           "SanitizerError", "assert_stream_parity", "load_baseline",
+           "write_baseline"]

@@ -1,0 +1,97 @@
+"""CLI: ``python -m repro.analysis [--json]`` (wrapped by scripts/lint.sh).
+
+Runs the import-graph checker, the determinism linter, and the
+hash-stability check over the repo, subtracts the baseline, and exits
+non-zero iff *new* violations remain:
+
+  python -m repro.analysis                  # human-readable report
+  python -m repro.analysis --json           # machine-readable (CI)
+  python -m repro.analysis --write-baseline # accept current findings
+
+Policy and baseline default to the checked-in files next to this module
+(``policy.json`` / ``baseline.json``); ``--root``/``--policy``/
+``--baseline`` retarget everything, which is how the self-tests run the
+suite against deliberately broken fixture trees.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis.determinism import check_determinism
+from repro.analysis.hashstab import check_hash_stability
+from repro.analysis.imports import check_imports, scan_modules
+from repro.analysis.report import (AnalysisResult, Violation, apply_baseline,
+                                   load_baseline, write_baseline)
+
+_PKG_DIR = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_POLICY = os.path.join(_PKG_DIR, "policy.json")
+DEFAULT_BASELINE = os.path.join(_PKG_DIR, "baseline.json")
+
+
+def default_root() -> str:
+    # src/repro/analysis -> repo root is three levels up from the package
+    return os.path.abspath(os.path.join(_PKG_DIR, "..", "..", ".."))
+
+
+def run_analysis(root: str, policy: dict,
+                 baseline: Optional[dict] = None) -> AnalysisResult:
+    """The whole suite as a library call (tests drive this directly)."""
+    modules = scan_modules(root, policy.get("roots", ["src"]))
+    violations: List[Violation] = []
+    violations += check_imports(modules, policy.get("import_rules", []))
+    violations += check_determinism(modules, root,
+                                    policy.get("determinism", []))
+    violations += check_hash_stability(policy)
+    violations.sort(key=lambda v: (v.path, v.lineno, v.rule, v.detail))
+    new, accepted = apply_baseline(violations, baseline or {})
+    return AnalysisResult(violations=new, baselined=accepted,
+                          checked_modules=len(modules))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="architecture & determinism static analysis")
+    ap.add_argument("--root", default=default_root(),
+                    help="repo root containing the source roots")
+    ap.add_argument("--policy", default=DEFAULT_POLICY,
+                    help="layering/determinism policy JSON")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="accepted-findings baseline JSON")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into --baseline")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    args = ap.parse_args(argv)
+
+    with open(args.policy) as f:
+        policy = json.load(f)
+    baseline = {} if args.no_baseline else load_baseline(args.baseline)
+    result = run_analysis(args.root, policy, baseline)
+
+    if args.write_baseline:
+        write_baseline(args.baseline,
+                       result.violations + result.baselined)
+        print(f"wrote {len(result.violations) + len(result.baselined)} "
+              f"accepted finding(s) to {args.baseline}")
+        return 0
+
+    if args.as_json:
+        print(json.dumps(result.to_json(), indent=1, sort_keys=True))
+    else:
+        for v in result.violations:
+            print(v.format())
+        print(f"repro.analysis: {result.checked_modules} modules checked, "
+              f"{len(result.violations)} new violation(s), "
+              f"{len(result.baselined)} baselined")
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,10 +23,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict
+from typing import Dict, TYPE_CHECKING
 
 from repro.core.hardware import TPU_V5E
-from repro.models.config import ModelConfig, ShapeConfig
+
+if TYPE_CHECKING:       # annotation-only: the closed forms read cfg/shape
+    from repro.models.config import ModelConfig, ShapeConfig  # attributes
+#   duck-typed, so core stays importable without jax (models.config pulls
+#   jax.numpy; import-policy rule serving-runtime-jax-free covers core)
 
 
 @dataclasses.dataclass

@@ -215,10 +215,21 @@ class Cluster:
     """Role-tagged engine pools driven by one virtual-time event loop."""
 
     def __init__(self, pools: Dict[str, List[Engine]], *,
-                 scheduler=None, router=None, rate_matcher=None):
+                 scheduler=None, router=None, rate_matcher=None,
+                 sanitize: Optional[bool] = None):
         from repro.serving.policies import FCFSScheduler, RoundRobinRouter
         assert pools and all(r in (PREFILL, DECODE, MIXED) for r in pools), \
             f"roles must be {PREFILL}/{DECODE}/{MIXED}: {list(pools)}"
+        # opt-in invariant monitor: explicit flag wins, else REPRO_SANITIZE.
+        # Imported lazily so the loop carries no analysis dependency when off.
+        if sanitize is None:
+            from repro.analysis.sanitizer import sanitize_enabled_by_env
+            sanitize = sanitize_enabled_by_env()
+        if sanitize:
+            from repro.analysis.sanitizer import ClusterSanitizer
+            self.sanitizer: Optional[ClusterSanitizer] = ClusterSanitizer()
+        else:
+            self.sanitizer = None
         self._views: Dict[str, List[Engine]] = {}
         self.pools: Dict[str, List[Engine]] = {
             role: ObservedList(engines, self._invalidate_views)
@@ -320,6 +331,8 @@ class Cluster:
         and straggler drains."""
         for slot, req in list(eng.slot_req.items()):
             req.reset_for_requeue()
+            if self.sanitizer is not None:
+                self.sanitizer.on_requeue(req)
             self.queue.insert(0, req)
             self.stats.requeued += 1
             eng.evict(slot)
@@ -334,6 +347,8 @@ class Cluster:
     def _fail_engine(self, eng: Engine):
         """Re-queue everything in flight on a dead engine."""
         self.stats.engine_failures += 1
+        if self.sanitizer is not None:
+            self.sanitizer.on_engine_failure(eng)
         self._invalidate_views()    # the engine may stay pooled, unhealthy
         self.requeue_inflight(eng)
         if self.rate_matcher is not None:
@@ -385,18 +400,25 @@ class Cluster:
         on_episode = getattr(self.scheduler, "on_episode", None)
         if on_episode is not None:
             on_episode(self)    # e.g. drop per-request affinity memos
+        san = self.sanitizer
+        if san is not None:
+            san.on_episode_begin(self)
         self._workload = workload
         prepare = getattr(self.rate_matcher, "prepare", None)
         if prepare is not None:
             prepare(self)       # e.g. apply a static split before round 1
         try:
             while True:
+                if san is not None:
+                    san.on_round(self.now)
                 horizon = self.now if until is None \
                     else min(self.now, until)
                 for r in workload.poll(horizon):
                     served.append(r)
                     self.queue.append(r)    # chronological; requeues stay
                     #                         at the front (reset_for_requeue)
+                    if san is not None:
+                        san.on_arrival(r, self.now)
                 progressed = self._step()
                 if self.now > max_wall_s:
                     break
@@ -413,7 +435,9 @@ class Cluster:
                 break       # exhausted (or waiting on nothing: drained)
         finally:
             self._workload = None
-        return sla_metrics(served)
+        if san is not None:     # conservation only on clean exit — an
+            san.on_episode_end(self, served)    # exception above already
+        return sla_metrics(served)              # carries the diagnosis
 
     def _step(self) -> bool:
         """One scheduling round. Returns False when everything is drained."""
@@ -446,6 +470,8 @@ class Cluster:
             self.stats.prefill_busy_s += dt
             req.first_token_t = self.now
             req.output.append(tok)
+            if self.sanitizer is not None:
+                self.sanitizer.on_prefill(req, eng, self.now)
             self.pending_insert.append((req, tok, cache, eng))
             progressed = True
 
@@ -458,6 +484,8 @@ class Cluster:
                 still.append((req, tok, cache, src))
                 continue
             target.insert(req, cache)
+            if self.sanitizer is not None:
+                self.sanitizer.on_insert(req, target, self.now)
             req._next_tok = tok
             if target is not src:
                 self.stats.transfers += 1
@@ -492,14 +520,19 @@ class Cluster:
             return True
         self.now += eng.step_times[-1]
         self.stats.decode_busy_s += eng.step_times[-1]
+        san = self.sanitizer
         for slot, tok in nxt.items():
             req = eng.slot_req[slot]
+            if san is not None:
+                san.on_token(req, eng, self.now)
             req.output.append(tok)
             req.token_times.append(self.now)
             req._next_tok = tok
             if req.done:
                 req.done_t = self.now
                 eng.evict(slot)
+                if san is not None:
+                    san.on_complete(req, self.now)
                 if self._workload is not None:
                     self._workload.on_complete(req, self.now)
         return True

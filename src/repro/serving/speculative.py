@@ -10,14 +10,12 @@ paper lists as future work.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, TYPE_CHECKING, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models import transformer as T
-from repro.models.config import ModelConfig
+if TYPE_CHECKING:
+    from repro.models.config import ModelConfig
 
 
 def speculative_decode(target_params, target_cfg: ModelConfig,
@@ -25,6 +23,12 @@ def speculative_decode(target_params, target_cfg: ModelConfig,
                        prompt: np.ndarray, n_tokens: int, k: int = 4
                        ) -> Tuple[List[int], dict]:
     """Greedy speculative decode of `n_tokens`. Returns (tokens, stats)."""
+    # jax and the jit'd model enter here, not at module scope: the serving
+    # package stays importable without jax (import-policy protected set)
+    import jax.numpy as jnp
+
+    from repro.models import transformer as T
+
     V = target_cfg.vocab_size
     cap = len(prompt) + n_tokens + k + 1
     lg_t, cache_t = T.prefill_full(target_params, target_cfg,

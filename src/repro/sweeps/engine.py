@@ -54,8 +54,13 @@ def evaluate_cell(cell: SweepCell) -> Tuple[List[dict], dict]:
     With ``cell.simulate`` the analytic records are joined by one
     ``kind="sim"`` row: a bounded ``Cluster.serve`` episode on the
     analytic-time ``SimEngine`` backend (``sweeps/simulate.py``), persisted
-    in the same shard so resume/cache-hit semantics are unchanged."""
-    t0 = time.perf_counter()
+    in the same shard so resume/cache-hit semantics are unchanged.
+
+    The meta carries only deterministic quantities — shard bytes must be
+    identical across reruns, hosts, and PYTHONHASHSEEDs (the SweepStore
+    cache contract; enforced by ``repro.analysis`` and the byte-stability
+    regression test). Wall-clock timing lives in the in-memory
+    ``SweepReport``, never in a shard."""
     model = get_perf_model(cell.model)
     if cell.mode == "disagg":
         records, points, grid_points = _eval_disagg(model, cell)
@@ -65,8 +70,7 @@ def evaluate_cell(cell: SweepCell) -> Tuple[List[dict], dict]:
         from repro.sweeps.simulate import simulate_cell
         records = records + simulate_cell(cell)
     meta = {"points": points, "grid_points": grid_points,
-            "n_records": len(records),
-            "elapsed_s": round(time.perf_counter() - t0, 6)}
+            "n_records": len(records)}
     return records, meta
 
 

@@ -1,0 +1,385 @@
+"""repro.analysis: seeded-violation fixtures for every checker + sanitizer.
+
+Each static-analysis test writes a deliberately broken mini-repo into
+tmp_path and asserts the suite catches exactly the seeded hazard (and
+stays quiet on the clean twin); the sanitizer tests inject live
+event-loop violations — a clock that runs backwards, decode before
+insert, double prefill — and assert ``SanitizerError``.
+"""
+import json
+import textwrap
+import types
+
+import pytest
+
+from repro.analysis import (ClusterSanitizer, SanitizerError,
+                            assert_stream_parity, load_baseline)
+from repro.analysis.__main__ import (DEFAULT_BASELINE, DEFAULT_POLICY,
+                                     default_root, main, run_analysis)
+from repro.analysis.determinism import check_determinism
+from repro.analysis.hashstab import check_hash_stability
+from repro.analysis.imports import check_imports, scan_modules
+from repro.analysis.report import Violation, apply_baseline
+from repro.core.paper_models import LLAMA31_8B
+from repro.serving.backends import make_engine
+from repro.serving.cluster import Cluster
+from repro.serving.simengine import SimEngine
+from repro.workloads import Burst, FixedShape, OpenLoopWorkload
+
+
+def mini_repo(tmp_path, files):
+    """Write ``{relpath: source}`` under ``<tmp>/src`` and return root."""
+    for rel, src in files.items():
+        p = tmp_path / "src" / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src), encoding="utf-8")
+    return str(tmp_path)
+
+
+JAX_FREE_RULE = {"name": "jax-free", "modules": ["app.serve*"],
+                 "forbid": ["jax"], "allow": ["type_checking", "lazy"],
+                 "transitive": True}
+
+
+# ---------------------------------------------------------------------------
+# import-graph checker
+
+
+def test_import_kinds_classified(tmp_path):
+    root = mini_repo(tmp_path, {"app/serve.py": """\
+        from typing import TYPE_CHECKING
+        import numpy as np
+        if TYPE_CHECKING:
+            import jax
+        def go():
+            import jax.numpy as jnp
+            return jnp
+        """})
+    mod = scan_modules(root, ["src"])["app.serve"]
+    kinds = {e.imported: e.kind for e in mod.edges}
+    assert kinds["numpy"] == "eager"
+    assert kinds["jax"] == "type_checking"
+    assert kinds["jax.numpy"] == "lazy"
+
+
+def test_eager_jax_in_protected_module_fails(tmp_path):
+    """Acceptance fixture: a module-scope jax import in a protected
+    module must be a violation; the TYPE_CHECKING/lazy twin is clean."""
+    root = mini_repo(tmp_path, {
+        "app/serve_bad.py": "import jax.numpy as jnp\n",
+        "app/serve_ok.py": """\
+            from typing import TYPE_CHECKING
+            if TYPE_CHECKING:
+                import jax
+            def go():
+                import jax
+                return jax
+            """})
+    vs = check_imports(scan_modules(root, ["src"]), [JAX_FREE_RULE])
+    assert [(v.rule, v.module) for v in vs] == \
+        [("forbidden-import", "app.serve_bad")]
+    assert "'jax.numpy'" in vs[0].detail and "eager" in vs[0].detail
+
+
+def test_transitive_violation_names_chain(tmp_path):
+    """Protected module -> helper -> eager jax: caught, chain reported.
+    The same helper reached through a lazy edge is fine."""
+    root = mini_repo(tmp_path, {
+        "app/serve_a.py": "from app import helper\n",
+        "app/serve_b.py": "def go():\n    from app import helper\n",
+        "app/helper.py": "import jax\n"})
+    vs = check_imports(scan_modules(root, ["src"]), [JAX_FREE_RULE])
+    assert [(v.rule, v.module) for v in vs] == \
+        [("forbidden-import-transitive", "app.serve_a")]
+    assert "app.serve_a -> app.helper -> jax" in vs[0].detail
+
+
+def test_from_import_reports_one_violation_per_line(tmp_path):
+    root = mini_repo(tmp_path, {
+        "app/serve.py": "from jax.numpy import cos, dot, exp\n"})
+    vs = check_imports(scan_modules(root, ["src"]), [JAX_FREE_RULE])
+    assert len(vs) == 1 and "'jax.numpy'" in vs[0].detail
+
+
+def test_syntax_error_is_a_violation(tmp_path):
+    root = mini_repo(tmp_path, {"app/serve.py": "def broken(:\n"})
+    vs = check_imports(scan_modules(root, ["src"]), [JAX_FREE_RULE])
+    assert [v.rule for v in vs] == ["syntax-error"]
+
+
+def test_relative_imports_resolve_for_layering(tmp_path):
+    root = mini_repo(tmp_path, {
+        "app/__init__.py": "",
+        "app/serve_x.py": "from . import kern\n",
+        "app/kern.py": "import jax\n"})
+    vs = check_imports(scan_modules(root, ["src"]), [
+        {"name": "no-kern", "modules": ["app.serve*"],
+         "forbid": ["app.kern"], "allow": ["type_checking"]}])
+    assert [(v.rule, v.module) for v in vs] == \
+        [("forbidden-import", "app.serve_x")]
+
+
+# ---------------------------------------------------------------------------
+# determinism linter
+
+
+def _det(root, checks, modules=("app.*",)):
+    return check_determinism(
+        scan_modules(root, ["src"]), root,
+        [{"name": "g", "modules": list(modules), "checks": checks}])
+
+
+def test_unseeded_rng_flagged_seeded_clean(tmp_path):
+    """Acceptance fixture: unseeded default_rng() in a sweeps-group
+    module fails; the seeded call does not."""
+    root = mini_repo(tmp_path, {"app/engine.py": """\
+        import numpy as np
+        bad = np.random.default_rng()
+        good = np.random.default_rng(17)
+        """})
+    vs = _det(root, ["unseeded-rng"])
+    assert [(v.rule, v.lineno) for v in vs] == [("unseeded-rng", 2)]
+
+
+def test_global_rng_variants_flagged(tmp_path):
+    root = mini_repo(tmp_path, {"app/engine.py": """\
+        import random
+        import numpy as np
+        from random import shuffle
+        a = np.random.randint(0, 10)
+        b = random.random()
+        shuffle([1, 2])
+        """})
+    vs = _det(root, ["global-rng"])
+    assert [v.lineno for v in vs] == [4, 5, 6]
+
+
+def test_wallclock_variants_flagged(tmp_path):
+    root = mini_repo(tmp_path, {"app/engine.py": """\
+        import time
+        from datetime import datetime
+        from time import perf_counter
+        t0 = time.time()
+        t1 = perf_counter()
+        t2 = datetime.now()
+        """})
+    vs = _det(root, ["wallclock"])
+    assert [v.lineno for v in vs] == [4, 5, 6]
+    assert "time.time()" in vs[0].detail
+
+
+def test_json_sort_keys_flagged_only_without_flag(tmp_path):
+    root = mini_repo(tmp_path, {"app/store.py": """\
+        import json
+        a = json.dumps({"k": 1})
+        b = json.dumps({"k": 1}, sort_keys=True)
+        """})
+    vs = _det(root, ["json-sort-keys"])
+    assert [v.lineno for v in vs] == [2]
+
+
+def test_set_iteration_order_flagged(tmp_path):
+    root = mini_repo(tmp_path, {"app/store.py": """\
+        items = list(set([3, 1, 2]))
+        for x in {"a", "b"}:
+            print(x)
+        ok = sorted(set([3, 1, 2]))
+        """})
+    vs = _det(root, ["set-order"])
+    assert [v.lineno for v in vs] == [1, 2]
+
+
+def test_float_sum_only_in_frontier_group(tmp_path):
+    root = mini_repo(tmp_path, {
+        "app/pareto.py": "area = sum([0.1] * 10)\n",
+        "app/other.py": "n = sum([1, 2])\n"})
+    vs = _det(root, ["float-sum"], modules=("app.pareto",))
+    assert [(v.module, v.lineno) for v in vs] == [("app.pareto", 1)]
+
+
+# ---------------------------------------------------------------------------
+# baseline + CLI + hash stability
+
+
+def test_baseline_absorbs_count_fails_on_growth():
+    v = Violation("wallclock", "app.engine", "time.time()")
+    base = {v.fingerprint: 2}
+    new, acc = apply_baseline([v, v], base)
+    assert not new and len(acc) == 2
+    new, acc = apply_baseline([v, v, v], base)     # growth at a known site
+    assert len(new) == 1 and len(acc) == 2
+
+
+def test_repo_analysis_is_clean():
+    """Acceptance: the suite passes on this repo with the checked-in
+    policy and baseline."""
+    with open(DEFAULT_POLICY) as f:
+        policy = json.load(f)
+    result = run_analysis(default_root(), policy,
+                          load_baseline(DEFAULT_BASELINE))
+    assert result.ok, [v.format() for v in result.violations]
+    assert result.checked_modules > 50
+
+
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    root = mini_repo(tmp_path, {"app/serve.py": "import jax\n"})
+    policy = tmp_path / "policy.json"
+    policy.write_text(json.dumps({
+        "roots": ["src"], "import_rules": [JAX_FREE_RULE]}))
+    args = ["--root", root, "--policy", str(policy),
+            "--baseline", str(tmp_path / "absent.json"), "--json"]
+    assert main(args) == 1
+    out = json.loads(capsys.readouterr().out)
+    assert not out["ok"]
+    assert [v["rule"] for v in out["violations"]] == ["forbidden-import"]
+    # accept the finding, then the same invocation is clean
+    assert main(args[:-1] + ["--write-baseline"]) == 0
+    capsys.readouterr()
+    assert main(args) == 0
+    assert json.loads(capsys.readouterr().out)["ok"]
+
+
+def test_hash_stability_detects_tampered_pin():
+    with open(DEFAULT_POLICY) as f:
+        policy = json.load(f)
+    assert check_hash_stability(policy) == []
+    bad = json.loads(json.dumps(policy))
+    bad["hash_stability"]["spec_hash"] = "0" * 16
+    bad["hash_stability"]["spec_canonical_keys"].append("new_field")
+    vs = check_hash_stability(bad)
+    assert {"hash drifted" in v.detail or "keys drifted" in v.detail
+            for v in vs} == {True}
+    assert len(vs) == 2
+
+
+# ---------------------------------------------------------------------------
+# virtual-time sanitizer
+
+
+def _sim_cluster(**kw):
+    mk = lambda i: make_engine("sim", i, LLAMA31_8B, slots=4, capacity=96)
+    return Cluster({"prefill": [mk(0)], "decode": [mk(1), mk(2)]}, **kw)
+
+
+def _workload(n=6):
+    return OpenLoopWorkload(Burst(n, at=0.0), FixedShape(16, 4), vocab=97,
+                            seed=0)
+
+
+def test_sanitizer_clean_run_and_parity():
+    a, b = _sim_cluster(sanitize=True), _sim_cluster(sanitize=True)
+    assert a.sanitizer is not None
+    ma = a.serve(_workload())
+    b.serve(_workload())
+    assert ma["completed"] == 6
+    assert a.sanitizer.admitted == a.sanitizer.completed == 6
+    assert len(a.sanitizer.token_hashes()) == 6
+    assert_stream_parity(a.sanitizer, b.sanitizer)              # content
+    assert_stream_parity(a.sanitizer, b.sanitizer, content=False)
+
+
+def test_sanitizer_off_by_default_and_env_enabled(monkeypatch):
+    assert _sim_cluster().sanitizer is None
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert _sim_cluster().sanitizer is not None
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert _sim_cluster().sanitizer is None
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert _sim_cluster(sanitize=False).sanitizer is None   # flag wins
+
+
+class _BackwardsClockEngine(SimEngine):
+    """Acceptance fixture: an engine whose steps *rewind* virtual time."""
+
+    def _advance(self, dt):
+        return super()._advance(-abs(dt))
+
+
+def test_sanitizer_catches_time_regression():
+    mk = lambda i: _BackwardsClockEngine(i, LLAMA31_8B, slots=4,
+                                         capacity=96)
+    cl = Cluster({"prefill": [mk(0)], "decode": [mk(1)]}, sanitize=True)
+    with pytest.raises(SanitizerError, match="ran backwards"):
+        cl.serve(_workload())
+
+
+def test_sanitizer_catches_decode_before_insert():
+    san = ClusterSanitizer()
+    req = types.SimpleNamespace(rid=7, output=[])
+    eng = types.SimpleNamespace(engine_id=0)
+    san.on_arrival(req, 0.0)
+    with pytest.raises(SanitizerError, match="decoded before insert"):
+        san.on_token(req, eng, 0.1)
+
+
+def test_sanitizer_catches_double_prefill_per_round():
+    san = ClusterSanitizer()
+    eng = types.SimpleNamespace(engine_id=0)
+    r1 = types.SimpleNamespace(rid=1, output=[])
+    r2 = types.SimpleNamespace(rid=2, output=[])
+    san.on_round(0.0)
+    for r in (r1, r2):
+        san.on_arrival(r, 0.0)
+    san.on_prefill(r1, eng, 0.1)
+    with pytest.raises(SanitizerError, match="2 prefills"):
+        san.on_prefill(r2, eng, 0.2)
+    san.on_round(0.2)                   # new round: budget resets
+    san.on_prefill(r2, eng, 0.3)
+
+
+def test_sanitizer_catches_conservation_loss():
+    san = ClusterSanitizer()
+    req = types.SimpleNamespace(rid=3, output=[])
+    san.on_arrival(req, 0.0)
+    cluster = types.SimpleNamespace(queue=[], pending_insert=[],
+                                    engines=lambda: [])
+    with pytest.raises(SanitizerError, match="conservation"):
+        san.on_episode_end(cluster, [req])
+
+
+def test_sanitizer_catches_requeue_after_completion():
+    san = ClusterSanitizer()
+    req = types.SimpleNamespace(rid=4, output=[1, 2])
+    eng = types.SimpleNamespace(engine_id=0)
+    san.on_arrival(req, 0.0)
+    san.on_prefill(req, eng, 0.1)
+    san.on_insert(req, eng, 0.1)
+    san.on_complete(req, 0.2)
+    with pytest.raises(SanitizerError, match="requeued after completion"):
+        san.on_requeue(req)
+
+
+def test_stream_parity_mismatch_raises():
+    a, b = ClusterSanitizer(), ClusterSanitizer()
+    eng = types.SimpleNamespace(engine_id=0)
+    for san, toks in ((a, [1, 2, 3]), (b, [1, 2, 4])):
+        req = types.SimpleNamespace(rid=1, output=toks)
+        san.on_arrival(req, 0.0)
+        san.on_prefill(req, eng, 0.1)
+        san.on_insert(req, eng, 0.1)
+        san.on_complete(req, 0.2)
+    with pytest.raises(SanitizerError, match="diverged"):
+        assert_stream_parity(a, b)
+    assert_stream_parity(a, b, content=False)   # same lengths: counts OK
+
+
+def test_sanitizer_survives_engine_failure_requeue():
+    """A mid-serve engine failure requeues in-flight work; the sanitizer
+    must track the replay, not flag it."""
+    mk = lambda i: make_engine("sim", i, LLAMA31_8B, slots=4, capacity=96)
+    e_p, e_d1, e_d2 = mk(0), mk(1), mk(2)
+    cl = Cluster({"prefill": [e_p], "decode": [e_d1, e_d2]}, sanitize=True)
+    fired = [False]
+    orig = e_d1.decode_step
+
+    def flaky(toks):
+        if len(e_d1.step_times) >= 2 and not fired[0]:
+            fired[0] = True
+            e_d1.fail()         # next use raises EngineFailure mid-serve
+        return orig(toks)
+
+    e_d1.decode_step = flaky
+    metrics = cl.serve(_workload(6), max_wall_s=600)
+    assert metrics["completed"] == 6
+    assert cl.sanitizer.engine_failures == 1
+    assert cl.sanitizer.requeued == cl.stats.requeued >= 1

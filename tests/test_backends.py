@@ -1,0 +1,90 @@
+"""serving.backends: construction errors, calibration fallbacks, lazy jax.
+
+The backend switch is load-bearing for the jax-free invariant: asking for
+``"sim"`` must never pay the jax import, and a missing or corrupt
+calibration table must degrade to the raw roofline (scale 1.0), never
+crash a sweep.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+from repro.core.paper_models import LLAMA31_8B
+from repro.serving.backends import BACKENDS, make_engine
+from repro.serving.simengine import (SimCalibration, load_calibration,
+                                     save_calibration)
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        make_engine("vllm", 0, LLAMA31_8B)
+    assert set(BACKENDS) == {"real", "sim"}
+
+
+def test_real_backend_requires_params():
+    # the error must fire before any Engine construction (no jax work)
+    with pytest.raises(ValueError, match="requires model params"):
+        make_engine("real", 0, LLAMA31_8B, None)
+
+
+def test_sim_ignores_params_and_takes_calibration():
+    cal = SimCalibration(prefill_scale=2.0, decode_scale=3.0)
+    eng = make_engine("sim", 3, LLAMA31_8B, params={"unused": True},
+                      slots=2, capacity=64, calibration=cal)
+    assert eng.backend == "sim" and eng.engine_id == 3
+    assert eng.calibration is cal
+
+
+def test_load_calibration_missing_file_falls_back(tmp_path):
+    assert load_calibration(str(tmp_path / "nope.json"),
+                            LLAMA31_8B.name) is None
+
+
+def test_load_calibration_malformed_table_falls_back(tmp_path):
+    p = tmp_path / "cal.json"
+    p.write_text("{this is not json", encoding="utf-8")
+    assert load_calibration(str(p), LLAMA31_8B.name) is None
+
+
+def test_load_calibration_roundtrip_and_unknown_model(tmp_path):
+    p = str(tmp_path / "cal.json")
+    save_calibration(p, LLAMA31_8B.name, None,
+                     SimCalibration(prefill_scale=1.5, decode_scale=2.5))
+    got = load_calibration(p, LLAMA31_8B.name)
+    assert got == SimCalibration(prefill_scale=1.5, decode_scale=2.5)
+    assert load_calibration(p, "some-other-model") is None
+
+
+_SIM_ONLY = """
+import sys
+from repro.core.paper_models import LLAMA31_8B
+from repro.serving.backends import make_engine
+from repro.serving.cluster import Cluster
+from repro.workloads import Burst, FixedShape, OpenLoopWorkload
+
+mk = lambda i: make_engine("sim", i, LLAMA31_8B, slots=4, capacity=96)
+cluster = Cluster({"prefill": [mk(0)], "decode": [mk(1), mk(2)]},
+                  sanitize=True)
+metrics = cluster.serve(OpenLoopWorkload(Burst(6, at=0.0),
+                                         FixedShape(16, 4), vocab=97,
+                                         seed=0))
+assert metrics["completed"] == 6, metrics
+loaded = sorted(m for m in sys.modules if m.split(".")[0] in
+                ("jax", "jaxlib", "flax", "optax"))
+assert not loaded, f"sim-only serve imported accelerator deps: {loaded}"
+"""
+
+
+def test_sim_only_use_never_imports_jax(tmp_path):
+    """A full sim-backend serve episode (sanitizer on) in a fresh
+    interpreter must leave jax unimported — conftest imports jax in this
+    process, so the check needs a subprocess."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", _SIM_ONLY], capture_output=True, text=True,
+        env=env, cwd=ROOT)
+    assert proc.returncode == 0, proc.stderr

@@ -2,6 +2,8 @@
 import json
 import os
 import random
+import subprocess
+import sys
 
 import numpy as np
 import pytest
@@ -560,3 +562,48 @@ def test_golden_small_grid():
                 assert got[k] == pytest.approx(v, rel=1e-9), (k, got, want)
             else:
                 assert got[k] == v, (k, got, want)
+
+
+# ---------------------------------------------------------------------------
+# byte stability: shard bytes are host-state independent
+
+
+_SWEEP_ONCE = """
+import sys
+from repro.sweeps import SweepSpec, SweepStore, run_sweep
+
+spec = SweepSpec.create(models=["llama-3.1-8b"], hardware=["v5e"],
+                        isl=[128], osl=[16], reuse=[0.0], modes=["disagg"],
+                        ttl_targets=3, max_chips=8, simulate=True,
+                        sim_requests=4)
+run_sweep(spec, SweepStore(sys.argv[1]))
+"""
+
+
+def test_sweep_shards_byte_stable_across_hash_seeds(tmp_path):
+    """The same ``simulate=True`` sweep in two fresh interpreters with
+    different ``PYTHONHASHSEED``s must write byte-identical shard trees —
+    the SweepStore cache/resume contract that the determinism linter
+    (``repro.analysis``) enforces statically."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    trees = []
+    for hashseed, sub in (("0", "a"), ("1", "b")):
+        out = tmp_path / sub
+        env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"),
+                   PYTHONHASHSEED=hashseed)
+        proc = subprocess.run(
+            [sys.executable, "-c", _SWEEP_ONCE, str(out)],
+            capture_output=True, text=True, env=env, cwd=root)
+        assert proc.returncode == 0, proc.stderr
+        tree = {}
+        for dirpath, _, files in os.walk(out):
+            for fn in files:
+                p = os.path.join(dirpath, fn)
+                with open(p, "rb") as f:
+                    tree[os.path.relpath(p, out)] = f.read()
+        assert tree, "sweep wrote no shards"
+        trees.append(tree)
+    a, b = trees
+    assert sorted(a) == sorted(b)
+    for rel in sorted(a):
+        assert a[rel] == b[rel], f"shard bytes differ: {rel}"
