@@ -219,7 +219,8 @@ def main(argv=None) -> None:
         with open(args.out, "w") as f:
             # allow_nan=False keeps the artifact valid for strict parsers
             # (missing percentiles are already None, not NaN)
-            json.dump(trajectory, f, indent=1, allow_nan=False)
+            json.dump(trajectory, f, indent=1, allow_nan=False,
+                      sort_keys=True)
         print(f"# wrote {len(trajectory)} records -> {args.out}")
 
     if args.prefill_chip != args.decode_chip and args.hetero_out != "-":
@@ -234,7 +235,8 @@ def main(argv=None) -> None:
                   f"{row['tokens_per_s']:.1f} tok/s, "
                   f"p99 ftl {row['p99_ftl_s']:.4f}s")
         with open(args.hetero_out, "w") as f:
-            json.dump(hetero, f, indent=1, allow_nan=False)
+            json.dump(hetero, f, indent=1, allow_nan=False,
+                      sort_keys=True)
         print(f"# wrote hetero comparison -> {args.hetero_out}")
 
 

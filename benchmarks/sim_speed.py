@@ -130,10 +130,10 @@ def main(argv=None):
         "floor": args.floor,
         "parity": parity,
     }
-    print(json.dumps(report, indent=1))
+    print(json.dumps(report, indent=1, sort_keys=True))
     if args.out != "-":
         with open(args.out, "w") as f:
-            json.dump(report, f, indent=1)
+            json.dump(report, f, indent=1, sort_keys=True)
         print(f"# wrote {args.out}")
 
     assert all(parity.values()), f"backend schedules diverged: {parity}"

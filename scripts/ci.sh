@@ -8,20 +8,23 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "== lint: repro.analysis (layering + determinism + hash pins) =="
+echo "== lint: repro.analysis (layering/determinism/units/contracts/hotpath) =="
 python -m repro.analysis --json > /tmp/analysis.json \
     || { cat /tmp/analysis.json; exit 1; }
 python - <<'PY'
 import json
 d = json.load(open("/tmp/analysis.json"))
 assert d["ok"] and not d["violations"], d["violations"]
+for name, t in sorted(d.get("timings", {}).items()):
+    print("  pass %-12s %7.1f ms" % (name, t * 1e3))
 print("repro.analysis OK: %d modules checked, %d baselined finding(s)"
       % (d["checked_modules"], len(d["baselined"])))
 PY
 
-echo "== lint: sanitizer-enabled serving loop =="
+echo "== lint: sanitizer-enabled serving loop + policy-purity guard =="
 REPRO_SANITIZE=1 python -m pytest -q \
-    tests/test_simengine.py::test_sim_failure_requeues_and_replays_identically
+    tests/test_simengine.py::test_sim_failure_requeues_and_replays_identically \
+    "tests/test_analysis.py::test_purity_guard_trips_on_mutating_policy"
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q

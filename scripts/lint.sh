@@ -1,11 +1,15 @@
 #!/usr/bin/env bash
 # Architecture & determinism lint: wraps `python -m repro.analysis`
-# (import-graph layering, determinism hazards, SweepSpec hash stability).
+# (import-graph layering, determinism hazards, dimensional consistency,
+# plugin contracts, hot-path complexity, SweepSpec hash stability).
 #
 #   scripts/lint.sh                    # human-readable report, exit 1 on
 #                                      # any finding not in the baseline
+#   scripts/lint.sh --changed          # only files changed vs HEAD
+#                                      # (plus untracked), the fast loop
 #   scripts/lint.sh --json             # machine-readable (CI)
 #   scripts/lint.sh --write-baseline   # accept current findings
+#   scripts/lint.sh --explain RULE     # a rule's rationale and fix
 #
 # Policy and baseline live next to the package:
 # src/repro/analysis/{policy.json,baseline.json}.
@@ -13,4 +17,21 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m repro.analysis "$@"
+
+args=()
+for a in "$@"; do
+    if [ "$a" = "--changed" ]; then
+        changed=$( (git diff --name-only HEAD -- '*.py';
+                    git ls-files --others --exclude-standard -- '*.py') \
+                   | sort -u)
+        if [ -z "$changed" ]; then
+            echo "lint.sh --changed: no changed .py files"
+            exit 0
+        fi
+        # shellcheck disable=SC2206
+        args+=(--files $changed)
+    else
+        args+=("$a")
+    fi
+done
+exec python -m repro.analysis "${args[@]+"${args[@]}"}"

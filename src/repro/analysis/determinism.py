@@ -189,18 +189,16 @@ def check_determinism(modules: Dict[str, Module], root: str,
                       groups: List[dict]) -> List[Violation]:
     """Run each policy group's checks over its matching modules. Groups:
     ``{"name": ..., "modules": [patterns], "checks": [rule names]}``."""
-    import os
+    from repro.analysis.imports import parse_module
     out: List[Violation] = []
     for group in groups:
         checks = group["checks"]
         for mod in modules.values():
             if not _match_any(mod.name, group["modules"]):
                 continue
-            with open(os.path.join(root, mod.path), encoding="utf-8") as f:
-                try:
-                    tree = ast.parse(f.read(), filename=mod.path)
-                except SyntaxError:
-                    continue        # reported by the import checker
+            tree = parse_module(mod, root)
+            if tree is None:
+                continue            # reported by the import checker
             v = _DetVisitor(mod, checks)
             v.visit(tree)
             out.extend(v.violations)

@@ -43,6 +43,8 @@ class Module:
     name: str                   # dotted module name
     path: str                   # repo-relative file path
     edges: List[ImportEdge]
+    abspath: str = ""           # absolute path (multi-root scans re-open
+    #                             sources through this, not root+path)
 
 
 def _is_type_checking_test(test: ast.expr) -> bool:
@@ -114,12 +116,23 @@ class _ImportVisitor(ast.NodeVisitor):
 
 
 def module_name(root: str, path: str, src_prefix: str) -> str:
+    """Dotted module name for a file under ``<root>/<src_prefix>``.
+
+    A root named ``src`` (or ``src/...``) is a *package* root: its prefix
+    vanishes (``src/repro/core/x.py`` -> ``repro.core.x``). Any other root
+    (``scripts``, ``benchmarks``, ``tests``) is a *directory* of loose
+    modules: the root's own path becomes the name prefix
+    (``scripts/gen_trace_corpus.py`` -> ``scripts.gen_trace_corpus``), so
+    policy patterns can target them without colliding with ``repro.*``."""
     rel = os.path.relpath(path, os.path.join(root, src_prefix))
     rel = rel[:-3] if rel.endswith(".py") else rel
     parts = rel.split(os.sep)
     if parts[-1] == "__init__":
         parts = parts[:-1]
-    return ".".join(parts)
+    prefix_parts = [p for p in src_prefix.replace("\\", "/").split("/") if p]
+    if prefix_parts and prefix_parts[0] != "src":
+        parts = prefix_parts + parts
+    return ".".join(p for p in parts if p)
 
 
 def scan_modules(root: str, src_roots: Iterable[str]) -> Dict[str, Module]:
@@ -146,16 +159,33 @@ def scan_modules(root: str, src_roots: Iterable[str]) -> Dict[str, Module]:
                 except SyntaxError as e:
                     out[name] = Module(name, rel, [ImportEdge(
                         f"<syntax error: {e.msg}>", "eager",
-                        e.lineno or 0)])
+                        e.lineno or 0)], os.path.abspath(path))
                     continue
                 v = _ImportVisitor(pkg)
                 v.visit(tree)
-                out[name] = Module(name, rel, v.edges)
+                out[name] = Module(name, rel, v.edges,
+                                   os.path.abspath(path))
     return out
 
 
 def _match_any(name: str, patterns: Iterable[str]) -> bool:
     return any(fnmatch.fnmatchcase(name, p) for p in patterns)
+
+
+def module_path(mod: Module, root: str) -> str:
+    """Filesystem path of a scanned module (multi-root scans carry their
+    own absolute path; single-root callers may still pass a bare root)."""
+    return mod.abspath or os.path.join(root, mod.path)
+
+
+def parse_module(mod: Module, root: str) -> Optional[ast.AST]:
+    """Re-parse a scanned module for a follow-on AST pass; None on syntax
+    errors (already reported by check_imports)."""
+    with open(module_path(mod, root), encoding="utf-8") as f:
+        try:
+            return ast.parse(f.read(), filename=mod.path)
+        except SyntaxError:
+            return None
 
 
 def _forbidden(imported: str, forbid: Iterable[str]) -> bool:

@@ -38,6 +38,8 @@ class AnalysisResult:
     violations: List[Violation]
     baselined: List[Violation]
     checked_modules: int
+    timings: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #   pass name -> elapsed seconds (CI's per-pass timing readout)
 
     @property
     def ok(self) -> bool:
@@ -53,6 +55,8 @@ class AnalysisResult:
             "checked_modules": self.checked_modules,
             "violations": [row(v) for v in self.violations],
             "baselined": [row(v) for v in self.baselined],
+            "timings": {k: round(t, 4)
+                        for k, t in sorted(self.timings.items())},
         }
 
 
@@ -93,14 +97,27 @@ def load_baseline(path: Optional[str]) -> Dict[str, int]:
 
 def write_baseline(path: str, violations: List[Violation]) -> None:
     """Regenerate the baseline from current findings (sorted, counted) —
-    the `--write-baseline` workflow after deliberately accepting a site."""
+    the `--write-baseline` workflow after deliberately accepting a site.
+    Existing ``why`` annotations are preserved by fingerprint, so a
+    burn-down rewrite doesn't strip the rationale of surviving entries;
+    genuinely new fingerprints get a fill-me-in placeholder."""
+    whys: Dict[str, str] = {}
+    try:
+        with open(path) as f:
+            for entry in json.load(f).get("accepted", []):
+                fp = f"{entry['rule']}|{entry['module']}|{entry['detail']}"
+                if entry.get("why"):
+                    whys[fp] = entry["why"]
+    except (FileNotFoundError, ValueError):
+        pass
     counts: Dict[str, Violation] = {}
     tally: Dict[str, int] = {}
     for v in violations:
         counts.setdefault(v.fingerprint, v)
         tally[v.fingerprint] = tally.get(v.fingerprint, 0) + 1
     entries = [{"rule": counts[fp].rule, "module": counts[fp].module,
-                "detail": counts[fp].detail, "count": n}
+                "detail": counts[fp].detail, "count": n,
+                "why": whys.get(fp, "TODO: annotate why this is accepted")}
                for fp, n in sorted(tally.items())]
     with open(path, "w") as f:
         json.dump({"accepted": entries}, f, indent=1, sort_keys=True)

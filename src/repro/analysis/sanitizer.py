@@ -203,6 +203,36 @@ class ClusterSanitizer:
                     f"requeued={self.requeued})")
         self._record("episode_end", len(served), self.completed)
 
+    # -- policy-purity guard ------------------------------------------------
+    # runtime twin of analysis/contracts.py's contract-mutation rule: the
+    # static pass catches direct mutations in hook bodies; this catches
+    # mutation laundered through calls the AST can't resolve.
+
+    def state_digest(self, cluster: Any) -> Tuple:
+        """Cheap fingerprint of cluster-visible state — O(engines), no
+        per-slot detail, so the sim_speed floor survives with the
+        sanitizer on. Memo caches and prefix caches are deliberately
+        excluded: policies may warm those."""
+        pools = tuple(
+            (role, tuple((id(e), bool(e.healthy), len(e.slot_req))
+                         for e in cluster.pools[role]))
+            for role in sorted(cluster.pools))
+        return (cluster.now, len(cluster.queue),
+                len(cluster.pending_insert), pools)
+
+    def check_hook_purity(self, cluster: Any, hook: str,
+                          before: Tuple) -> None:
+        """Called by the event loop right after a pure hook returns: the
+        digest must not have moved while the policy was deciding."""
+        after = self.state_digest(cluster)
+        if after != before:
+            self._fail(
+                f"policy hook {hook} mutated cluster-visible state "
+                f"(pure hooks observe and return decisions; use "
+                f"cluster.migrate/requeue_inflight/retire from "
+                f"RateMatcher hooks instead):\n"
+                f"  before: {before}\n  after:  {after}")
+
     # -- parity surface -----------------------------------------------------
 
     def token_hashes(self) -> Dict[int, str]:

@@ -47,11 +47,11 @@ def kv_transfer_requirement(model: PerfLLM, *, isl: int, osl: int,
     ``sys_`` per side), the feasibility check uses the *min* of the two
     pools' per-chip DCN bandwidths — the hop is only as fast as its
     slower endpoint."""
-    kv_req = model.kv_bytes_per_token() * isl
+    kv_req_bytes = model.kv_bytes_per_token() * isl
     n_pre = kv_shard_chips(model, prefill_mapping)
     n_dec = kv_shard_chips(model, decode_mapping)
-    egress = kv_req * prefill_batch / (ftl * n_pre)
-    ingress = kv_req * decode_batch / (ttl * max(osl, 1) * n_dec)
+    egress = kv_req_bytes * prefill_batch / (ftl * n_pre)
+    ingress = kv_req_bytes * decode_batch / (ttl * max(osl, 1) * n_dec)
     pre_sys = as_system(prefill_sys, base=sys_) if prefill_sys is not None \
         else sys_
     dec_sys = as_system(decode_sys, base=sys_) if decode_sys is not None \
@@ -59,7 +59,7 @@ def kv_transfer_requirement(model: PerfLLM, *, isl: int, osl: int,
     provisioned = min(pre_sys.chip.dcn_bw, dec_sys.chip.dcn_bw)
     return TransferRequirement(
         egress_bw=egress, ingress_bw=ingress,
-        kv_bytes_per_request=kv_req,
+        kv_bytes_per_request=kv_req_bytes,
         feasible=max(egress, ingress) <= provisioned)
 
 

@@ -239,8 +239,8 @@ def decode_step_perf(model: PerfLLM, m: Mapping, batch: int, kv_len: int,
     flops = 2.0 * model.active_params() * b + attn_flops
 
     w_bytes = _weight_bytes_per_chip(model, m, b)
-    kv_total = b * kv_len * model.kv_bytes_per_token()
-    kv_bytes = kv_total / kv_shard_chips(model, m)
+    kv_total_bytes = b * kv_len * model.kv_bytes_per_token()
+    kv_bytes = kv_total_bytes / kv_shard_chips(model, m)
     act_bytes = 8.0 * b * model.d_model * model.bytes_act * model.num_layers / (m.tp * m.pp)
     mem_bytes = w_bytes + kv_bytes + act_bytes
 
@@ -263,9 +263,9 @@ def decode_step_perf(model: PerfLLM, m: Mapping, batch: int, kv_len: int,
         n_ops += m.pp - 1
     collective_s = coll_bytes / sys_.chip.ici_bw + n_ops * OP_LATENCY
 
-    exposed = collective_s * (1.0 - sys_.collective_overlap)
-    step = max(compute_s, memory_s) + exposed
-    return PhasePerf(compute_s, memory_s, collective_s, step, step,
+    exposed_s = collective_s * (1.0 - sys_.collective_overlap)
+    step_s = max(compute_s, memory_s) + exposed_s
+    return PhasePerf(compute_s, memory_s, collective_s, step_s, step_s,
                      float(b), g)
 
 
@@ -310,12 +310,12 @@ def prefill_perf(model: PerfLLM, m: Mapping, batch: int, isl: int,
         n_ops += (m.pp - 1) * n_chunks
     collective_s = coll_bytes / sys_.chip.ici_bw + n_ops * OP_LATENCY
 
-    exposed = collective_s * (1.0 - sys_.collective_overlap)
-    work = max(compute_s, memory_s) + exposed
+    exposed_s = collective_s * (1.0 - sys_.collective_overlap)
+    work_s = max(compute_s, memory_s) + exposed_s
     # CPP pipelining: n_chunks*batch microbatches across pp stages
     micro = n_chunks * batch
-    latency = work * (1.0 + (m.pp - 1) / micro)
-    return PhasePerf(compute_s, memory_s, collective_s, latency, work,
+    latency = work_s * (1.0 + (m.pp - 1) / micro)
+    return PhasePerf(compute_s, memory_s, collective_s, latency, work_s,
                      tokens, g)
 
 
@@ -342,8 +342,9 @@ def piggyback_step_perf(model: PerfLLM, m: Mapping, decode_batch: int,
         attn_flops += reproj
 
     w_bytes = _weight_bytes_per_chip(model, m, toks)
-    kv_total = (decode_batch * kv_len + chunk_ctx) * model.kv_bytes_per_token()
-    kv_bytes = kv_total / kv_shard_chips(model, m)
+    kv_total_bytes = ((decode_batch * kv_len + chunk_ctx)
+                      * model.kv_bytes_per_token())
+    kv_bytes = kv_total_bytes / kv_shard_chips(model, m)
     act_bytes = (8.0 * toks * model.d_model * model.bytes_act
                  * model.num_layers / (m.tp * m.pp))
     mem_bytes = w_bytes + kv_bytes + act_bytes
@@ -364,9 +365,9 @@ def piggyback_step_perf(model: PerfLLM, m: Mapping, decode_batch: int,
         n_ops += 2 * model.num_layers
     collective_s = coll_bytes / sys_.chip.ici_bw + n_ops * OP_LATENCY
 
-    exposed = collective_s * (1.0 - sys_.collective_overlap)
-    step = max(compute_s, memory_s) + exposed
-    return PhasePerf(compute_s, memory_s, collective_s, step, step,
+    exposed_s = collective_s * (1.0 - sys_.collective_overlap)
+    step_s = max(compute_s, memory_s) + exposed_s
+    return PhasePerf(compute_s, memory_s, collective_s, step_s, step_s,
                      float(toks), g)
 
 

@@ -76,10 +76,11 @@ class RateMatchedPoint:
         weighting (``overall_tput_per_chip``) treats a v5e and an h100 as
         equal denominators; dollars are the denominator operators actually
         budget."""
-        cost = self.cost_per_hour
-        if cost <= 0:
+        cost_per_hour = self.cost_per_hour
+        if cost_per_hour <= 0:
             return 0.0
-        return self.overall_tput_per_chip * self.total_chips / cost
+        return (self.overall_tput_per_chip * self.total_chips
+                / cost_per_hour)
 
     def pool_rates(self) -> Tuple[float, float]:
         """(prefill, decode) balanced request rates over the sized pools."""

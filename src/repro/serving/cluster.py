@@ -67,8 +67,12 @@ class AdmissionQueue:
         self._back: Dict[int, Request] = {}
         self._back_sorted = True
         self._last_arrival = float("-inf")
+        # bumped on every content change; (now, _version) keys the
+        # cluster's ready_requests() memo
+        self._version = 0
 
     def append(self, req: Request) -> None:
+        self._version += 1
         self._back[id(req)] = req
         if req.arrival_t < self._last_arrival:
             self._back_sorted = False
@@ -79,6 +83,7 @@ class AdmissionQueue:
         """Front-insert (requeue). Re-inserting a request that is already
         queued *moves* it to the front — a single entry, never two, so a
         later ``remove`` can't leave a ghost copy behind."""
+        self._version += 1
         k = id(req)
         self._back.pop(k, None)
         self._front.pop(k, None)
@@ -89,6 +94,7 @@ class AdmissionQueue:
         self.push_front(req)
 
     def remove(self, req: Request) -> None:
+        self._version += 1
         k = id(req)
         if k in self._front:
             del self._front[k]
@@ -245,6 +251,9 @@ class Cluster:
         self.stats = PoolStats()
         self.now = 0.0
         self._workload = None       # set while serve() is driving
+        # ready_requests() memo: ((now, queue version), snapshot)
+        self._ready_cache: Optional[Tuple[Tuple[float, int],
+                                          List[Request]]] = None
 
     # -- pool views (also the legacy orchestrator attribute surface) -------
 
@@ -295,12 +304,26 @@ class Cluster:
         return self._healthy_view("decode", (DECODE, MIXED))
 
     def engines(self) -> List[Engine]:
-        return [e for pool in self.pools.values() for e in pool]
+        """Every pooled engine (healthy or not), memoized until the next
+        pool mutation (``ObservedList`` invalidates through
+        ``_invalidate_views``). Treat as a read-only snapshot."""
+        view = self._views.get("__all__")
+        if view is None:
+            view = [e for pool in self.pools.values() for e in pool]
+            self._views["__all__"] = view
+        return view
 
     def ready_requests(self) -> List[Request]:
         """Queued requests that have arrived, in queue order (requeued
-        requests sit at the front)."""
-        return self.queue.ready(self.now)
+        requests sit at the front). Memoized on (virtual time, queue
+        version) — schedulers probing it once per engine per round share
+        one scan. Treat as a read-only snapshot."""
+        key = (self.now, self.queue._version)
+        cached = self._ready_cache
+        if cached is None or cached[0] != key:
+            cached = (key, self.queue.ready(self.now))
+            self._ready_cache = cached
+        return cached[1]
 
     def ready_count(self) -> int:
         """Number of arrived-but-unadmitted requests (the rate matcher's
@@ -343,6 +366,16 @@ class Cluster:
         self.requeue_inflight(eng)
         src.remove(eng)
         dst.append(eng)
+
+    def retire(self, eng: Engine):
+        """Drop an engine from the fleet entirely (the rate-matcher
+        failover path): re-queue anything still in flight, then remove it
+        from every pool that holds it. Policies call this instead of
+        editing pool lists directly."""
+        self.requeue_inflight(eng)
+        for pool in self.pools.values():
+            if eng in pool:
+                pool.remove(eng)
 
     def _fail_engine(self, eng: Engine):
         """Re-queue everything in flight on a dead engine."""
@@ -392,6 +425,7 @@ class Cluster:
         # or in-flight work behind; each serve() starts clean — stale slot
         # occupants must not decode into (or complete against) this episode
         self.queue = AdmissionQueue()
+        self._ready_cache = None    # fresh queue restarts at version 0
         self.pending_insert = []
         self._invalidate_views()    # engines may have failed between episodes
         for eng in self.engines():
@@ -445,13 +479,18 @@ class Cluster:
 
         # 1) admission + prefill: the scheduler picks per prefill-capable
         #    engine; mixed engines also need a local decode slot to admit.
+        san = self.sanitizer
         mixed = self.pools.get(MIXED, ())
         for eng in self.prefill_capable_healthy():
             if not eng.healthy:         # failed since the view was cached
                 continue
             if mixed and eng in mixed and not eng.has_free_slot():
                 continue
+            if san is not None:
+                digest = san.state_digest(self)
             req = self.scheduler.select(self, eng)
+            if san is not None:
+                san.check_hook_purity(self, "scheduler.select", digest)
             if req is None:
                 continue
             self.queue.remove(req)
@@ -479,7 +518,11 @@ class Cluster:
         #    slot (the disaggregation hop when it crosses engines).
         still = []
         for req, tok, cache, src in self.pending_insert:
+            if san is not None:
+                digest = san.state_digest(self)
             target = self.router.route(self, req, src)
+            if san is not None:
+                san.check_hook_purity(self, "router.route", digest)
             if target is None:
                 still.append((req, tok, cache, src))
                 continue

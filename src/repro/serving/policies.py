@@ -307,9 +307,7 @@ class StaticSplitRateMatcher:
             self.prepare(cluster)
 
     def on_failure(self, cluster, engine):
-        for pool in (cluster.prefill_pool, cluster.decode_pool):
-            if engine in pool:
-                pool.remove(engine)
+        cluster.retire(engine)
         self._rebalance(cluster, "failover")
 
 

@@ -200,9 +200,9 @@ class SimEngine:
         whose B=1 prefill cache is allocated at engine ``capacity`` (the
         transfer ships the padded tensors, not just the filled prefix);
         attention-free models ship their O(1) recurrent state."""
-        per_tok = self._perf.kv_bytes_per_token()
-        if per_tok > 0:
-            return int(self.capacity * per_tok)
+        bytes_per_tok = self._perf.kv_bytes_per_token()
+        if bytes_per_tok > 0:
+            return int(self.capacity * bytes_per_tok)
         p = self._perf                      # rwkv-style state: [H, N, N]
         state = p.num_layers * p.num_heads * p.dh * p.dh * 4
         mixes = 2 * p.num_layers * p.d_model * p.bytes_act

@@ -16,10 +16,13 @@ from repro.analysis import (ClusterSanitizer, SanitizerError,
                             assert_stream_parity, load_baseline)
 from repro.analysis.__main__ import (DEFAULT_BASELINE, DEFAULT_POLICY,
                                      default_root, main, run_analysis)
+from repro.analysis.contracts import check_contracts
 from repro.analysis.determinism import check_determinism
 from repro.analysis.hashstab import check_hash_stability
+from repro.analysis.hotpath import check_hotpath
 from repro.analysis.imports import check_imports, scan_modules
 from repro.analysis.report import Violation, apply_baseline
+from repro.analysis.units import check_units, parse_unit_str, unit_from_name
 from repro.core.paper_models import LLAMA31_8B
 from repro.serving.backends import make_engine
 from repro.serving.cluster import Cluster
@@ -198,6 +201,352 @@ def test_float_sum_only_in_frontier_group(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# units (dimensional consistency)
+
+
+def _units(root, names=None, modules=("app.*",)):
+    policy = {"units": {"modules": list(modules), "names": names or {}}}
+    return check_units(scan_modules(root, ["src"]), root, policy)
+
+
+def test_unit_suffix_and_registry_grammar():
+    reg = {"latency": parse_unit_str("s"), "isl": parse_unit_str("tokens")}
+    assert unit_from_name("exposed_s", reg) == {"s": 1}
+    assert unit_from_name("kv_total_bytes", reg) == {"bytes": 1}
+    assert unit_from_name("tokens_per_s", reg) == {"tokens": 1, "s": -1}
+    assert unit_from_name("hbm_bw", reg) == {"bytes": 1, "s": -1}
+    assert unit_from_name("bytes_per_chip", reg) == {"bytes": 1}  # count
+    assert unit_from_name("_prefill_latency", reg) == {"s": 1}    # registry
+    assert unit_from_name("plain_name", reg) is None
+
+
+def test_unit_mismatch_add_flagged_clean_twin_quiet(tmp_path):
+    """Acceptance fixture: seconds + bytes is a violation; seconds +
+    seconds and seconds + literal are not."""
+    root = mini_repo(tmp_path, {"app/perf.py": """\
+        def f(lat_s, size_bytes, other_s):
+            bad = lat_s + size_bytes
+            ok1_s = lat_s + other_s
+            ok2_s = lat_s + 0.5
+            return ok1_s
+        """})
+    vs = _units(root)
+    assert [(v.rule, v.lineno) for v in vs] == [("unit-mismatch-add", 2)]
+    assert "'s' + 'bytes'" in vs[0].detail
+
+
+def test_unit_mismatch_compare_and_minmax(tmp_path):
+    root = mini_repo(tmp_path, {"app/perf.py": """\
+        def f(lat_s, size_bytes):
+            if lat_s > size_bytes:
+                pass
+            worst = max(lat_s, size_bytes)
+            fine = max(lat_s, 0.0)
+            return worst, fine
+        """})
+    vs = _units(root)
+    assert [v.rule for v in vs] == ["unit-mismatch-compare"] * 2
+    assert [v.lineno for v in vs] == [2, 4]
+
+
+def test_unit_return_mismatch(tmp_path):
+    root = mini_repo(tmp_path, {"app/perf.py": """\
+        def total_s(size_bytes):
+            return size_bytes
+
+        def fine_s(lat_s):
+            return lat_s * 2
+        """})
+    vs = _units(root)
+    assert [v.rule for v in vs] == ["unit-return-mismatch"]
+    assert "total_s()" in vs[0].detail
+
+
+def test_unit_bind_mismatch_against_registry(tmp_path):
+    root = mini_repo(tmp_path, {"app/perf.py": """\
+        def f(size_bytes, xfer_bw):
+            lat_s = size_bytes * 2
+            ok_s = size_bytes / xfer_bw
+            return lat_s, ok_s
+        """})
+    vs = _units(root)
+    assert [(v.rule, v.lineno) for v in vs] == [("unit-bind-mismatch", 2)]
+    assert "'lat_s' declares 's'" in vs[0].detail
+
+
+def test_unit_unsuffixed_bind_demands_rename(tmp_path):
+    """The satellite rule that drove the exposed->exposed_s renames: a
+    derived pure-seconds quantity must not be bound to a bare name."""
+    root = mini_repo(tmp_path, {"app/perf.py": """\
+        def f(a_s, b_s, n_flops):
+            exposed = a_s + b_s
+            exposed_s = a_s + b_s
+            work = n_flops * 2
+            return exposed, exposed_s, work
+        """})
+    vs = _units(root)
+    # flops stays quiet (only pure s / bytes trigger the rename demand)
+    assert [(v.rule, v.lineno) for v in vs] == [("unit-unsuffixed-bind", 2)]
+    assert "'exposed'" in vs[0].detail
+
+
+def test_unit_unknown_operand_silences(tmp_path):
+    root = mini_repo(tmp_path, {"app/perf.py": """\
+        def f(lat_s, mystery):
+            out = lat_s + mystery
+            return out
+        """})
+    assert _units(root) == []
+
+
+# ---------------------------------------------------------------------------
+# plugin contracts
+
+
+_PROTO_SRC = """\
+    from typing import Protocol
+
+    class SchedulerPolicy(Protocol):
+        def select(self, cluster, engine): ...
+        def run_prefill(self, cluster, engine, req): ...
+
+    class Router(Protocol):
+        def route(self, cluster, req, src): ...
+    """
+
+_CONTRACT_POLICY = {"contracts": {
+    "protocol_modules": ["app.proto"],
+    "protocols": ["SchedulerPolicy", "Router"],
+    "purity": ["SchedulerPolicy", "Router"],
+    "protected_params": ["cluster", "engine", "eng", "src", "req"],
+    "mutation_allow": {"*": ["migrate", "requeue_inflight", "retire"],
+                       "run_prefill": ["prefill"]},
+    "exempt": []}}
+
+
+def _contracts(root):
+    return check_contracts(scan_modules(root, ["src"]), root,
+                           _CONTRACT_POLICY)
+
+
+def test_contract_signature_drift_flagged(tmp_path):
+    """Acceptance fixture: wrong arity / renamed params fail; an extra
+    *defaulted* config param is fine."""
+    root = mini_repo(tmp_path, {
+        "app/proto.py": _PROTO_SRC,
+        "app/impl.py": """\
+            class Drifted:
+                def select(self, cluster):
+                    return None
+                def run_prefill(self, cluster, engine, req):
+                    return 0, None
+
+            class Extra:
+                def select(self, cluster, engine, boost=1.0):
+                    return None
+                def run_prefill(self, cluster, engine, req):
+                    return 0, None
+            """})
+    vs = _contracts(root)
+    assert [(v.rule, v.lineno) for v in vs] == [("contract-signature", 2)]
+    assert "Drifted.select" in vs[0].detail
+
+
+def test_contract_mutation_flagged_approved_api_clean(tmp_path):
+    root = mini_repo(tmp_path, {
+        "app/proto.py": _PROTO_SRC,
+        "app/impl.py": """\
+            class Evil:
+                def select(self, cluster, engine):
+                    cluster.now = 0.0
+                    cluster.queue.pop()
+                    return None
+                def run_prefill(self, cluster, engine, req):
+                    return engine.prefill(req)
+
+            class Good:
+                def select(self, cluster, engine):
+                    cluster.requeue_inflight(engine)
+                    return None
+                def run_prefill(self, cluster, engine, req):
+                    return engine.prefill(req)
+            """})
+    vs = _contracts(root)
+    assert [v.rule for v in vs] == ["contract-mutation"] * 2
+    assert all("Evil.select" in v.detail for v in vs)
+
+
+def test_contract_mutation_through_pool_alias(tmp_path):
+    """The live finding this pass was built around: iterating a tuple of
+    cluster pools and mutating the loop variable."""
+    root = mini_repo(tmp_path, {
+        "app/proto.py": _PROTO_SRC,
+        "app/impl.py": """\
+            class Sneaky:
+                def route(self, cluster, req, src):
+                    for pool in (cluster.prefill_pool, cluster.decode_pool):
+                        if src in pool:
+                            pool.remove(src)
+                    return None
+            """})
+    vs = _contracts(root)
+    assert [v.rule for v in vs] == ["contract-mutation"]
+    assert ".remove()" in vs[0].detail
+
+
+def test_contract_determinism_scoped_to_hook_bodies(tmp_path):
+    """Wall clock / unseeded rng inside a hook are contract violations;
+    the same calls at module scope are out of this pass's scope (the
+    determinism groups own module level)."""
+    root = mini_repo(tmp_path, {
+        "app/proto.py": _PROTO_SRC,
+        "app/impl.py": """\
+            import time
+            import numpy as np
+
+            T0 = time.time()
+
+            class Impatient:
+                def select(self, cluster, engine):
+                    deadline = time.time()
+                    rng = np.random.default_rng()
+                    return None
+                def run_prefill(self, cluster, engine, req):
+                    return engine.prefill(req)
+            """})
+    vs = _contracts(root)
+    assert sorted(v.rule for v in vs) == ["contract-unseeded-rng",
+                                          "contract-wallclock"]
+    assert all("Impatient.select" in v.detail for v in vs)
+    assert all(v.lineno in (8, 9) for v in vs)      # not T0's line
+
+
+def test_contract_jax_import_in_hook_and_eager_module(tmp_path):
+    root = mini_repo(tmp_path, {
+        "app/proto.py": _PROTO_SRC,
+        "app/impl_lazy.py": """\
+            class Heavy:
+                def route(self, cluster, req, src):
+                    import jax
+                    return None
+            """,
+        "app/impl_eager.py": """\
+            import jax
+
+            class Eager:
+                def route(self, cluster, req, src):
+                    return None
+            """})
+    vs = sorted(_contracts(root), key=lambda v: v.module)
+    assert [(v.rule, v.module) for v in vs] == [
+        ("contract-jax-import", "app.impl_eager"),
+        ("contract-jax-import", "app.impl_lazy")]
+
+
+def test_contract_detection_through_base_chain(tmp_path):
+    """A subclass inheriting half the protocol is still an impl; only
+    its directly-defined (drifted) method is checked."""
+    root = mini_repo(tmp_path, {
+        "app/proto.py": _PROTO_SRC,
+        "app/impl.py": """\
+            class Base:
+                def select(self, cluster, engine):
+                    return None
+                def run_prefill(self, cluster, engine, req):
+                    return engine.prefill(req)
+
+            class Child(Base):
+                def select(self, cluster):
+                    return None
+            """})
+    vs = _contracts(root)
+    assert [v.rule for v in vs] == ["contract-signature"]
+    assert "Child.select" in vs[0].detail
+
+
+def test_contract_exempt_modules_skipped(tmp_path):
+    root = mini_repo(tmp_path, {
+        "app/proto.py": _PROTO_SRC,
+        "app/fixtures.py": """\
+            class DeliberatelyEvil:
+                def route(self, cluster, req, src):
+                    cluster.queue.pop()
+                    return None
+            """})
+    policy = json.loads(json.dumps(_CONTRACT_POLICY))
+    policy["contracts"]["exempt"] = ["app.fixtures"]
+    vs = check_contracts(scan_modules(root, ["src"]), root, policy)
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# hot-path complexity
+
+
+_HOTPATH_POLICY = {"hotpath": {
+    "modules": ["app.loop", "app.policy"],
+    "roots": ["Cluster.serve"],
+    "fleet_calls": ["engines", "decode_capable_healthy"],
+    "fleet_attrs": ["pools"]}}
+
+
+def _hotpath(root):
+    return check_hotpath(scan_modules(root, ["src"]), root,
+                         _HOTPATH_POLICY)
+
+
+def test_hotpath_flags_scans_and_allocs_in_reachable_code(tmp_path):
+    """Acceptance fixture: fleet scans/allocs in functions reachable
+    from the root are flagged; the same code in a cold function is not."""
+    root = mini_repo(tmp_path, {"app/loop.py": """\
+        class Cluster:
+            def serve(self):
+                return self._step()
+
+            def _step(self):
+                for e in self.engines():
+                    pass
+                order = sorted(self.engines())
+                return order
+
+            def engines(self):
+                return []
+
+        def cold_report(cluster):
+            for e in cluster.engines():
+                pass
+            return sorted(cluster.engines())
+        """})
+    vs = _hotpath(root)
+    assert all("Cluster." in v.detail for v in vs)      # cold_report quiet
+    rules = sorted((v.rule, v.lineno) for v in vs)
+    assert ("hotpath-scan", 6) in rules                 # for-loop
+    assert ("hotpath-scan", 8) in rules                 # sorted() reduction
+    assert ("hotpath-alloc", 8) in rules                # sorted() copy
+
+
+def test_hotpath_reaches_policies_through_dispatch_by_name(tmp_path):
+    """`self.scheduler.select(...)` resolves to every select in the
+    configured modules — the policy seam is on the hot path."""
+    root = mini_repo(tmp_path, {
+        "app/loop.py": """\
+            class Cluster:
+                def serve(self):
+                    return self.scheduler.select(self, None)
+            """,
+        "app/policy.py": """\
+            class Policy:
+                def select(self, cluster, engine):
+                    return [e for e in cluster.decode_capable_healthy()]
+            """})
+    vs = _hotpath(root)
+    assert sorted(v.rule for v in vs) == ["hotpath-alloc", "hotpath-scan"]
+    assert all(v.module == "app.policy" for v in vs)
+    assert "decode_capable_healthy()" in \
+        next(v.detail for v in vs if v.rule == "hotpath-scan")
+
+
+# ---------------------------------------------------------------------------
 # baseline + CLI + hash stability
 
 
@@ -237,6 +586,91 @@ def test_cli_exit_codes_and_json(tmp_path, capsys):
     capsys.readouterr()
     assert main(args) == 0
     assert json.loads(capsys.readouterr().out)["ok"]
+
+
+def test_repo_clean_per_pass_modulo_baseline():
+    """Acceptance: each new pass, run alone over this repo, finds nothing
+    the annotated baseline does not already budget."""
+    with open(DEFAULT_POLICY) as f:
+        policy = json.load(f)
+    root = default_root()
+    modules = scan_modules(root, policy["roots"])
+    base = load_baseline(DEFAULT_BASELINE)
+    for checker in (check_units, check_contracts, check_hotpath):
+        vs = sorted(checker(modules, root, policy),
+                    key=lambda v: (v.path, v.lineno, v.rule, v.detail))
+        new, _ = apply_baseline(vs, dict(base))
+        assert not new, [v.format() for v in new]
+
+
+def test_root_coverage_includes_scripts_benchmarks_tests():
+    """Satellite (b): the golden-writer scripts and benchmark drivers are
+    scanned (with prefixed names) and the golden writers sit in a
+    full-strength determinism group."""
+    with open(DEFAULT_POLICY) as f:
+        policy = json.load(f)
+    modules = scan_modules(default_root(), policy["roots"])
+    assert "scripts.gen_sweep_golden" in modules
+    assert "scripts.gen_trace_corpus" in modules
+    assert any(m.startswith("benchmarks.") for m in modules)
+    assert any(m.startswith("tests.") for m in modules)
+    groups = {g["name"]: g for g in policy["determinism"]}
+    assert set(groups["golden-writers"]["checks"]) >= \
+        {"unseeded-rng", "wallclock", "json-sort-keys"}
+    assert "wallclock" not in groups["benchmarks"]["checks"]
+
+
+def test_baseline_entries_burn_down_and_annotated():
+    """Every baseline entry must still correspond to a live finding (no
+    dead budget to hide new regressions behind) and carry a real why."""
+    with open(DEFAULT_BASELINE) as f:
+        accepted = json.load(f)["accepted"]
+    for e in accepted:
+        why = e.get("why", "")
+        assert why.strip() and "TODO" not in why, e
+    with open(DEFAULT_POLICY) as f:
+        policy = json.load(f)
+    result = run_analysis(default_root(), policy, None)     # no baseline
+    live = {(v.rule, v.module, v.detail) for v in result.violations}
+    stale = [e for e in accepted
+             if (e["rule"], e["module"], e["detail"]) not in live]
+    assert not stale, f"baseline entries with no live finding: {stale}"
+
+
+def test_cli_explain_rule(capsys):
+    assert main(["--explain", "unit-mismatch-add"]) == 0
+    out = capsys.readouterr().out
+    assert "why:" in out and "fix:" in out
+    assert main(["--explain", "no-such-rule"]) == 2
+    assert "known rules" in capsys.readouterr().out
+
+
+def test_files_filter_restricts_findings(tmp_path):
+    """--files (lint.sh --changed) only reports the named files and
+    skips the whole-repo hash-stability pass."""
+    root = mini_repo(tmp_path, {
+        "app/serve_a.py": "import jax\n",
+        "app/serve_b.py": "import jax\n"})
+    policy = {"roots": ["src"], "import_rules": [JAX_FREE_RULE]}
+    full = run_analysis(root, policy)
+    assert sorted(v.module for v in full.violations) == \
+        ["app.serve_a", "app.serve_b"]
+    only_a = run_analysis(root, policy,
+                          files=[str(tmp_path / "src/app/serve_a.py")])
+    assert [v.module for v in only_a.violations] == ["app.serve_a"]
+    assert set(full.timings) == set(only_a.timings) and full.timings
+
+
+def test_run_analysis_merges_multiple_roots(tmp_path):
+    ra, rb = tmp_path / "ra", tmp_path / "rb"
+    for root, rel in ((ra, "app/serve_a.py"), (rb, "app/serve_b.py")):
+        p = root / "src" / rel
+        p.parent.mkdir(parents=True)
+        p.write_text("import jax\n")
+    policy = {"roots": ["src"], "import_rules": [JAX_FREE_RULE]}
+    res = run_analysis([str(ra), str(rb)], policy)
+    assert sorted(v.module for v in res.violations) == \
+        ["app.serve_a", "app.serve_b"]
 
 
 def test_hash_stability_detects_tampered_pin():
@@ -361,6 +795,42 @@ def test_stream_parity_mismatch_raises():
     with pytest.raises(SanitizerError, match="diverged"):
         assert_stream_parity(a, b)
     assert_stream_parity(a, b, content=False)   # same lengths: counts OK
+
+
+class _MutatingScheduler:
+    """Deliberately impure: edits cluster state inside select. The static
+    contracts pass exempts this module; the runtime purity guard is the
+    layer that must catch it."""
+
+    def select(self, cluster, engine):
+        cluster.now += 1e-6
+        return None
+
+    def run_prefill(self, cluster, engine, req):       # pragma: no cover
+        raise AssertionError("select never admits")
+
+
+class _MutatingRouter:
+    def route(self, cluster, req, src):
+        cluster.queue.push_front(req)       # laundered requeue
+        return src
+
+
+def test_purity_guard_trips_on_mutating_policy():
+    cl = _sim_cluster(sanitize=True, scheduler=_MutatingScheduler())
+    with pytest.raises(SanitizerError, match="scheduler.select mutated"):
+        cl.serve(_workload(2), max_wall_s=5)
+
+
+def test_purity_guard_trips_on_mutating_router():
+    cl = _sim_cluster(sanitize=True, router=_MutatingRouter())
+    with pytest.raises(SanitizerError, match="router.route mutated"):
+        cl.serve(_workload(2), max_wall_s=5)
+
+
+def test_purity_guard_quiet_for_stock_policies():
+    cl = _sim_cluster(sanitize=True)
+    assert cl.serve(_workload(4))["completed"] == 4
 
 
 def test_sanitizer_survives_engine_failure_requeue():

@@ -807,3 +807,29 @@ def test_speculative_decode_exact_and_accepts(params):
     assert toks == ref
     assert stats["accepted"] == stats["proposed"]      # self-draft: all accepted
     assert stats["target_calls"] <= 1 + (N + k - 1) // k + 1
+
+
+def test_fleet_view_memoization(params):
+    """engines()/ready_requests() return the same snapshot until state
+    actually moves: pool edits invalidate through ObservedList, queue
+    edits bump the version counter, and the clock keys the ready memo."""
+    cl = disagg(params, [mk(0, params)], [mk(1, params)])
+    before = cl.engines()
+    assert cl.engines() is before               # memoized between mutations
+    extra = mk(2, params)
+    cl.decode_pool.append(extra)                # ObservedList invalidates
+    after = cl.engines()
+    assert after is not before and extra in after and extra not in before
+
+    reqs = gen_requests(3)
+    for r in reqs:
+        r.arrival_t = 0.0
+        cl.queue.append(r)
+    ready = cl.ready_requests()
+    assert cl.ready_requests() is ready         # same (now, queue-version)
+    assert [r.rid for r in ready] == [r.rid for r in reqs]
+    cl.queue.remove(reqs[0])                    # version bump -> fresh scan
+    ready2 = cl.ready_requests()
+    assert ready2 is not ready and len(ready2) == 2
+    cl.now += 1.0                               # clock moves -> fresh scan
+    assert cl.ready_requests() is not ready2
