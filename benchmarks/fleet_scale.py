@@ -1,0 +1,154 @@
+"""Fleet-scale simulation benchmark: 1k engines, 3 diurnal days, 1M requests.
+
+The paper's fleet-level claims (elastic scaling, rate-matching drift) only
+show up at scale; this benchmark proves the simulator reaches it. It serves
+a multi-day sinusoidal-rate (``Diurnal``) workload with lognormal request
+shapes through a 1000-engine disaggregated fleet on the event-heap loop,
+with every O(1)-memory feature engaged: streaming metrics (no retained
+requests), bounded per-engine step history, the lazy one-event workload
+generator, and the vectorized roofline grid priming the shared decode memo.
+
+Asserts two floors and emits ``BENCH_fleet.json``:
+
+  - wall-clock requests/s >= --floor (the event loop must not regress into
+    fleet-width scans: idle engines cost zero work)
+  - peak RSS <= --rss-ceiling MB (memory stays flat over 1e6 requests)
+
+  PYTHONPATH=src python benchmarks/fleet_scale.py           # full, ~2-4 min
+  PYTHONPATH=src python benchmarks/fleet_scale.py --smoke   # CI, seconds
+"""
+import argparse
+import json
+import resource
+import sys
+import time
+
+RPS_FLOOR = 2500.0          # wall-clock completed requests/s (full run;
+#                             measured ~4.5k on an otherwise idle host)
+RSS_CEILING_MB = 512.0      # peak RSS over the whole process (measured
+#                             ~50 MB: streaming metrics keep memory flat)
+SMOKE_RPS_FLOOR = 400.0     # smoke fleet is 40x smaller; floor scaled too
+
+
+def main(argv=None):
+    sys.path.insert(0, "src")
+    from repro.core.paper_models import PAPER_MODELS
+    from repro.serving.cluster import Cluster
+    from repro.serving.metrics import StreamingMetrics
+    from repro.serving.policies import ElasticPolicy
+    from repro.serving.simengine import SimEngine, prime_decode
+    from repro.workloads import Diurnal, LognormalShape, OpenLoopWorkload
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_fleet.json",
+                    help="artifact path; '-' disables")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="request cap (default 1_000_000, smoke 2_000)")
+    ap.add_argument("--days", type=float, default=3.0,
+                    help="diurnal horizon in virtual days")
+    ap.add_argument("--engines", type=int, default=None,
+                    help="fleet size (default 1000, smoke 25)")
+    ap.add_argument("--floor", type=float, default=None,
+                    help="minimum wall-clock requests/s")
+    ap.add_argument("--rss-ceiling-mb", type=float, default=RSS_CEILING_MB)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fleet + workload for CI")
+    args = ap.parse_args(argv)
+
+    n_requests = args.requests or (2_000 if args.smoke else 1_000_000)
+    n_engines = args.engines or (25 if args.smoke else 1000)
+    floor = args.floor if args.floor is not None else (
+        SMOKE_RPS_FLOOR if args.smoke else RPS_FLOOR)
+    # the smoke run compresses 3 days into 3 virtual hours so the diurnal
+    # swing still exercises both the loaded and the idle regime
+    period_s = 3600.0 if args.smoke else 86400.0
+    horizon_s = args.days * period_s
+    # base rate sized so the horizon generates ~15% more arrivals than the
+    # cap: the cap binds, guaranteeing >= n_requests served
+    base_rps = 1.15 * n_requests / horizon_s
+
+    perf = PAPER_MODELS["llama-3.1-8b"]
+    n_prefill = max(n_engines // 5, 1)
+    n_decode = n_engines - n_prefill
+    capacity = 2048
+
+    def eng(i, slots):
+        # step_history bounds the per-engine step-time log (the one
+        # per-step accumulator) so fleet memory stays flat over 1e6 steps
+        return SimEngine(i, perf, slots=slots, capacity=capacity,
+                         step_history=64)
+
+    pools = {"prefill": [eng(i, 4) for i in range(n_prefill)],
+             "decode": [eng(10_000 + i, 8) for i in range(n_decode)]}
+    rate_matcher = ElasticPolicy(tick_every_s=period_s / 24.0)
+    cluster = Cluster(pools, sanitize=False, rate_matcher=rate_matcher)
+
+    # one vectorized roofline pass per (batch, kv) grid — serving then
+    # never calls the scalar roofline on the decode path
+    primed = prime_decode(pools["prefill"] + pools["decode"], capacity)
+
+    workload = OpenLoopWorkload(
+        Diurnal(base_rps, amplitude=0.5, period=period_s),
+        LognormalShape(128, 16, 0.6, 0.5),
+        vocab=32_000, seed=0, max_requests=n_requests, horizon_s=horizon_s)
+
+    metrics = StreamingMetrics(window_s=period_s / 24.0,
+                               occupancy_every_s=period_s / 288.0)
+    t0 = time.perf_counter()
+    m = cluster.serve(workload, metrics=metrics)
+    wall = time.perf_counter() - t0
+
+    peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    rps = m["completed"] / wall
+
+    report = {
+        "bench": "fleet_scale",
+        "smoke": bool(args.smoke),
+        "model": perf.name,
+        "fleet": {"engines": n_engines, "prefill": n_prefill,
+                  "decode": n_decode, "elastic_moves": len(rate_matcher.moves)},
+        "workload": {"requests": n_requests, "days": args.days,
+                     "period_s": period_s, "base_rps": round(base_rps, 3),
+                     "shape": "lognormal(isl=128,osl=16)",
+                     "arrivals": "diurnal"},
+        "wall_s": round(wall, 3),
+        "rps": round(rps, 1),
+        "completed": m["completed"],
+        "arrived": m["arrived"],
+        "peak_rss_mb": round(peak_rss_mb, 1),
+        "floor_rps": floor,
+        "rss_ceiling_mb": args.rss_ceiling_mb,
+        "primed_grid_points": primed,
+        "virtual": {
+            "p50_ftl_s": round(m["p50_ftl_s"], 6),
+            "p99_ftl_s": round(m["p99_ftl_s"], 6),
+            "p50_ttl_s": round(m["p50_ttl_s"], 6),
+            "p99_ttl_s": round(m["p99_ttl_s"], 6),
+            "tokens_per_s": round(m["tokens_per_s"], 3),
+            "peak_rps": round(m["peak_rps"], 3),
+            "occupancy_decode": round(m.get("occupancy_decode", 0.0), 4),
+        },
+    }
+    print(json.dumps(report, indent=1, sort_keys=True))
+    if args.out != "-":
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.out}")
+
+    assert m["completed"] >= n_requests, (
+        f"served {m['completed']} < requested {n_requests}")
+    assert rps >= floor, (
+        f"fleet wall-clock rate {rps:,.0f} req/s below the "
+        f"{floor:,.0f} req/s floor")
+    assert peak_rss_mb <= args.rss_ceiling_mb, (
+        f"peak RSS {peak_rss_mb:.0f} MB above the "
+        f"{args.rss_ceiling_mb:.0f} MB ceiling")
+    print(f"# OK: {m['completed']:,} requests on {n_engines} engines in "
+          f"{wall:.1f}s -> {rps:,.0f} req/s (floor {floor:,.0f}), "
+          f"peak RSS {peak_rss_mb:.0f} MB (ceiling "
+          f"{args.rss_ceiling_mb:.0f})")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -121,6 +121,32 @@ print("BENCH_sim.json OK: sim backend %.0fx over real (floor %.0fx)"
       % (d["speedup"], d["floor"]))
 PY
 
+echo "== fleet-scale event loop (smoke) =="
+rm -f BENCH_fleet.json
+python benchmarks/fleet_scale.py --smoke > /dev/null
+python - <<'PY'
+import json, sys
+try:
+    with open("BENCH_fleet.json") as f:
+        d = json.load(f)
+except FileNotFoundError:
+    sys.exit("BENCH_fleet.json missing: fleet benchmark did not emit it")
+required = {"bench", "smoke", "model", "fleet", "workload", "wall_s", "rps",
+            "completed", "arrived", "peak_rss_mb", "floor_rps",
+            "rss_ceiling_mb", "primed_grid_points", "virtual"}
+missing = required - set(d)
+assert not missing, f"BENCH_fleet.json missing keys: {sorted(missing)}"
+assert d["completed"] >= d["workload"]["requests"] > 0, d
+assert d["rps"] >= d["floor_rps"] > 0, \
+    f"fleet rate {d['rps']} below floor {d['floor_rps']}"
+assert 0 < d["peak_rss_mb"] <= d["rss_ceiling_mb"], d
+assert d["primed_grid_points"] > 0, "decode grid was not primed"
+print("BENCH_fleet.json OK: %s engines -> %.0f req/s (floor %.0f), "
+      "peak RSS %.0f MB (ceiling %.0f)"
+      % (d["fleet"]["engines"], d["rps"], d["floor_rps"],
+         d["peak_rss_mb"], d["rss_ceiling_mb"]))
+PY
+
 echo "== simulator-in-the-loop sweep (smoke) =="
 SIM_SWEEP_ARGS=(--models llama-3.1-8b --hardware v5e --isl 256 --osl 32
     --reuse 0.0 0.5 --modes disagg coloc --ttl-targets 4 --max-chips 8

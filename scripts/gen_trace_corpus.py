@@ -4,12 +4,16 @@ Four small production-like JSONL traces (ROADMAP: the ``record_trace``
 regression corpus), each written *with prompts* so replay token streams
 are fully pinned by the file — independent of the replay seed:
 
-  - burst.jsonl     prefill-heavy burst at t=0 (open loop)
-  - diurnal.jsonl   thinned diurnal arrivals, lognormal shapes (open loop)
-  - sessions.jsonl  multi-turn conversations recorded from a closed-loop
-                    serve (arrival times are the recorded virtual times;
-                    prompts embed the prior turns' outputs)
-  - tiers.jsonl     interactive SLA tier superposed on a batch backfill
+  - burst.jsonl         prefill-heavy burst at t=0 (open loop)
+  - diurnal.jsonl       thinned diurnal arrivals, lognormal shapes (open loop)
+  - sessions.jsonl      multi-turn conversations recorded from a closed-loop
+                        serve (arrival times are the recorded virtual times;
+                        prompts embed the prior turns' outputs)
+  - tiers.jsonl         interactive SLA tier superposed on a batch backfill
+  - fleet_diurnal.jsonl two virtual days of fleet traffic compressed
+                        ~4000x (the day's rate swing in ~43 s of trace
+                        time), mixed request classes; golden carries the
+                        per-hour arrival marginals + compression factor
 
 Also rewrites ``golden.json``: per-trace file hashes and summary marginals
 that ``tests/test_trace_corpus.py`` asserts against. Regenerating is a
@@ -21,6 +25,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import math
 import pathlib
 import sys
 
@@ -33,12 +38,18 @@ from repro.models.config import ModelConfig  # noqa: E402
 from repro.serving.cluster import Cluster  # noqa: E402
 from repro.serving.engine import Engine  # noqa: E402
 from repro.workloads import (BATCH, INTERACTIVE, Burst, Diurnal,  # noqa: E402
-                             FixedShape, LognormalShape, OpenLoopWorkload,
-                             Recorder, SessionWorkload, Superpose,
-                             TraceReplay, materialize, record_trace)
+                             FixedShape, LognormalShape, MixtureShape,
+                             OpenLoopWorkload, Recorder, SessionWorkload,
+                             Superpose, TraceReplay, materialize,
+                             record_trace)
 
 OUT = pathlib.Path(__file__).resolve().parents[1] / "tests" / "data" / "traces"
 VOCAB = 97
+
+# fleet_diurnal: two virtual days squeezed so the full day/night rate swing
+# fits in a replayable-in-CI trace (1 virtual day -> 21.6 s of trace time)
+FLEET_COMPRESSION = 4000.0
+FLEET_DAYS = 2
 
 CFG = ModelConfig(name="trace-tiny", family="dense", num_layers=2, d_model=64,
                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=VOCAB,
@@ -67,6 +78,31 @@ def tiers_requests():
     return materialize(Superpose([backfill, urgent]))
 
 
+def fleet_diurnal_requests():
+    """Compressed multi-day fleet trace: diurnal arrivals starting at the
+    overnight trough (phase -pi/2), request shapes mixing chat, long-doc,
+    and short-probe classes — the workload family the fleet-scale event
+    loop is benchmarked against (``benchmarks/fleet_scale.py``)."""
+    period = 86400.0 / FLEET_COMPRESSION
+    shape = MixtureShape([(0.7, FixedShape(12, 4)),
+                          (0.2, FixedShape(32, 6)),
+                          (0.1, FixedShape(8, 3))])
+    return materialize(OpenLoopWorkload(
+        Diurnal(1.2, amplitude=0.8, period=period, phase=-math.pi / 2),
+        shape, vocab=VOCAB, seed=2026, max_requests=48,
+        horizon_s=FLEET_DAYS * period))
+
+
+def fleet_hourly_arrivals(reqs):
+    """Per-virtual-hour arrival counts (the trace's rate marginal)."""
+    hour = 86400.0 / FLEET_COMPRESSION / 24.0
+    counts = [0] * (FLEET_DAYS * 24)
+    for r in reqs:
+        b = min(int(r.arrival_t // hour), len(counts) - 1)
+        counts[b] += 1
+    return counts
+
+
 def session_requests():
     """Closed-loop sessions must be *served* to exist; the recorded
     arrival times are the serve's virtual times, frozen into the trace."""
@@ -86,9 +122,11 @@ def main():
     for name, gen in (("burst", burst_requests),
                       ("diurnal", diurnal_requests),
                       ("sessions", session_requests),
-                      ("tiers", tiers_requests)):
+                      ("tiers", tiers_requests),
+                      ("fleet_diurnal", fleet_diurnal_requests)):
         path = OUT / f"{name}.jsonl"
-        records = record_trace(gen(), path, with_prompts=True)
+        reqs = gen()
+        records = record_trace(reqs, path, with_prompts=True)
         sha = hashlib.sha256(path.read_bytes()).hexdigest()
         s = TraceReplay(path, vocab=VOCAB).summary()
         golden[name] = {
@@ -97,6 +135,10 @@ def main():
             "summary": {"isl": round(s.isl, 6), "osl": round(s.osl, 6),
                         "rate": round(s.rate, 6)},
         }
+        if name == "fleet_diurnal":
+            golden[name]["compression"] = FLEET_COMPRESSION
+            golden[name]["days"] = FLEET_DAYS
+            golden[name]["hourly_arrivals"] = fleet_hourly_arrivals(reqs)
         print(f"{name}: {len(records)} requests -> {path}")
     with open(OUT / "golden.json", "w") as f:
         json.dump(golden, f, indent=1, sort_keys=True)

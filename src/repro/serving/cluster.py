@@ -34,6 +34,7 @@ continues on the surviving pool, notifying the rate matcher for failover.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Any, Dict, List, Optional, TYPE_CHECKING, Tuple
 
 import numpy as np
@@ -45,6 +46,67 @@ if TYPE_CHECKING:       # Engine is annotation-only: the loop is backend-
     from repro.serving.engine import Engine     # agnostic (real or sim)
 
 PREFILL, DECODE, MIXED = "prefill", "decode", "mixed"
+
+# EventQueue event kinds. ARRIVAL marks a future-dated queued request (the
+# stuck-branch wake-up target); REBALANCE is an opt-in virtual-time rate-
+# matcher tick (``RateMatcher.tick_every_s``).
+EV_ARRIVAL, EV_REBALANCE = "arrival", "rebalance"
+
+
+class EventQueue:
+    """Min-heap of future virtual-time events keyed on ``(time, seq)``.
+
+    ``seq`` is a monotone push counter, so ties break deterministically by
+    insertion order and the pop order is total — two runs that push the
+    same events in the same order pop them identically (the schedule-
+    parity property ``tests/test_fleet_scale.py`` certifies). Entries are
+    ``(time, seq, kind, payload)``; kinds are the ``EV_*`` constants plus
+    whatever callers mint (payloads are opaque to the queue)."""
+
+    __slots__ = ("_heap", "_seq")
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, str, Any]] = []
+        self._seq = 0
+
+    def push(self, t: float, kind: str, payload: Any = None) -> int:
+        """Schedule ``kind`` at virtual time ``t``; returns the tie-break
+        sequence number assigned to the event."""
+        self._seq += 1
+        heapq.heappush(self._heap, (float(t), self._seq, kind, payload))
+        return self._seq
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def peek(self) -> Optional[Tuple[float, int, str, Any]]:
+        return self._heap[0] if self._heap else None
+
+    def pop(self) -> Tuple[float, int, str, Any]:
+        return heapq.heappop(self._heap)
+
+    def pop_due(self, now: float) -> Optional[Tuple[float, int, str, Any]]:
+        """Pop the earliest event scheduled at or before ``now`` — O(1)
+        when nothing is due, which is every round on a tickless cluster."""
+        if self._heap and self._heap[0][0] <= now:
+            return heapq.heappop(self._heap)
+        return None
+
+    def next_wake(self, now: float) -> Optional[float]:
+        """Earliest scheduled time strictly after ``now`` (stale entries at
+        or before ``now`` are dropped in passing), or None when idle."""
+        while self._heap:
+            t = self._heap[0][0]
+            if t > now:
+                return t
+            heapq.heappop(self._heap)
+        return None
+
+    def clear(self) -> None:
+        self._heap.clear()
 
 
 class AdmissionQueue:
@@ -60,7 +122,7 @@ class AdmissionQueue:
     the first future arrival; a caller that appends out of order only
     downgrades the scan to O(queued), never changes the result."""
 
-    def __init__(self):
+    def __init__(self, on_append=None):
         # two insertion-ordered id(req)->req maps: _front holds requeues
         # (iterated newest-first), _back holds arrivals in append order
         self._front: Dict[int, Request] = {}
@@ -70,6 +132,9 @@ class AdmissionQueue:
         # bumped on every content change; (now, _version) keys the
         # cluster's ready_requests() memo
         self._version = 0
+        # arrival hook: the cluster heap-schedules future-dated appends so
+        # the event loop can wake at the next arrival without scanning
+        self._on_append = on_append
 
     def append(self, req: Request) -> None:
         self._version += 1
@@ -78,6 +143,8 @@ class AdmissionQueue:
             self._back_sorted = False
         else:
             self._last_arrival = req.arrival_t
+        if self._on_append is not None:
+            self._on_append(req)
 
     def push_front(self, req: Request) -> None:
         """Front-insert (requeue). Re-inserting a request that is already
@@ -222,7 +289,8 @@ class Cluster:
 
     def __init__(self, pools: Dict[str, List[Engine]], *,
                  scheduler=None, router=None, rate_matcher=None,
-                 sanitize: Optional[bool] = None):
+                 sanitize: Optional[bool] = None,
+                 legacy_loop: bool = False):
         from repro.serving.policies import FCFSScheduler, RoundRobinRouter
         assert pools and all(r in (PREFILL, DECODE, MIXED) for r in pools), \
             f"roles must be {PREFILL}/{DECODE}/{MIXED}: {list(pools)}"
@@ -245,7 +313,7 @@ class Cluster:
         self.scheduler = scheduler or FCFSScheduler()
         self.router = router or RoundRobinRouter()
         self.rate_matcher = rate_matcher
-        self.queue = AdmissionQueue()
+        self.queue = AdmissionQueue(self._note_arrival)
         self.pending_insert: List[Tuple[Request, int, Any,
                                         Optional[Engine]]] = []
         self.stats = PoolStats()
@@ -254,6 +322,17 @@ class Cluster:
         # ready_requests() memo: ((now, queue version), snapshot)
         self._ready_cache: Optional[Tuple[Tuple[float, int],
                                           List[Request]]] = None
+        # event-heap loop state. legacy_loop=True restores the pre-heap
+        # round scan (serving/legacy_loop.py) for differential testing;
+        # it is frozen and scheduled for removal next PR.
+        self.legacy_loop = legacy_loop
+        self.events = EventQueue()
+        # engines holding at least one resident request (id(engine) ->
+        # engine): the decode phase walks this instead of the fleet, so
+        # idle engines cost zero work per round
+        self._occupied: Dict[int, Engine] = {}
+        self._decode_scratch: List[Engine] = []
+        self._metrics = None        # StreamingMetrics while serve() streams
 
     # -- pool views (also the legacy orchestrator attribute surface) -------
 
@@ -266,6 +345,29 @@ class Cluster:
 
     def _invalidate_views(self) -> None:
         self._views.clear()
+
+    def _note_arrival(self, req: Request) -> None:
+        """AdmissionQueue append hook: heap-schedule future-dated arrivals
+        so the event loop's stuck branch wakes at the next arrival in O(log
+        events) instead of scanning the queue. Past-dated appends (the
+        ``serve`` poll path delivers exactly those) cost one compare."""
+        if req.arrival_t > self.now:
+            self.events.push(req.arrival_t, EV_ARRIVAL)
+
+    def _decode_pos(self) -> Dict[int, int]:
+        """id(engine) -> iteration rank over ``decode_capable_healthy()``,
+        memoized with the healthy views (pool mutations invalidate). The
+        occupied-set decode phase sorts by this rank so it steps engines in
+        exactly the order the full-fleet scan used to."""
+        pos = self._views.get("__decode_pos__")
+        if pos is None:
+            pos = {}
+            i = 0
+            for e in self.decode_capable_healthy():
+                pos[id(e)] = i
+                i += 1
+            self._views["__decode_pos__"] = pos
+        return pos
 
     def _healthy_view(self, key: str, roles: Tuple[str, ...]) -> List[Engine]:
         """Cached healthy-engine list for a role set. Pool edits (failure,
@@ -359,6 +461,7 @@ class Cluster:
             self.queue.insert(0, req)
             self.stats.requeued += 1
             eng.evict(slot)
+        self._occupied.pop(id(eng), None)
 
     def migrate(self, eng: Engine, src: List[Engine], dst: List[Engine]):
         """Move a role-free engine between pools, re-queueing its in-flight
@@ -396,7 +499,7 @@ class Cluster:
         return self.serve(StaticWorkload(requests), max_wall_s=max_wall_s)
 
     def serve(self, workload, *, until: Optional[float] = None,
-              max_wall_s: float = 1e9) -> Dict[str, float]:
+              max_wall_s: float = 1e9, metrics=None) -> Dict[str, float]:
         """Drive a ``Workload`` through the virtual-time event loop.
 
         Events are pulled incrementally (``workload.poll``) as the clock
@@ -407,6 +510,14 @@ class Cluster:
         time and drains what is in flight; ``max_wall_s`` hard-stops the
         loop. Returns ``sla_metrics`` over every request the workload
         emitted.
+
+        ``metrics`` (a ``serving.metrics.StreamingMetrics``) switches the
+        episode to streaming accounting: completions fold into fixed-size
+        sketches as they happen, finished requests are not retained (unless
+        the sanitizer needs them for conservation), and the return value is
+        ``metrics.result()`` — same keys as ``sla_metrics`` plus windowed
+        rates and occupancy. This is what keeps memory flat over
+        million-request fleet episodes (``benchmarks/fleet_scale.py``).
 
         Each call is one episode: the virtual clock restarts at 0 so
         workload timestamps are serve-relative (back-to-back calls — e.g.
@@ -424,9 +535,11 @@ class Cluster:
         # a previous episode cut short by max_wall_s may have left queued
         # or in-flight work behind; each serve() starts clean — stale slot
         # occupants must not decode into (or complete against) this episode
-        self.queue = AdmissionQueue()
+        self.queue = AdmissionQueue(self._note_arrival)
         self._ready_cache = None    # fresh queue restarts at version 0
         self.pending_insert = []
+        self.events.clear()         # no events from a cut-short episode
+        self._occupied.clear()
         self._invalidate_views()    # engines may have failed between episodes
         for eng in self.engines():
             for slot in list(eng.slot_req):
@@ -437,10 +550,20 @@ class Cluster:
         san = self.sanitizer
         if san is not None:
             san.on_episode_begin(self)
+        # streaming episodes drop finished requests; the sanitizer's
+        # episode-end conservation check still needs the full list
+        keep_served = metrics is None or san is not None
+        self._metrics = metrics
         self._workload = workload
         prepare = getattr(self.rate_matcher, "prepare", None)
         if prepare is not None:
             prepare(self)       # e.g. apply a static split before round 1
+        # opt-in timed rebalance: a matcher declaring tick_every_s gets
+        # tick(cluster) at that virtual-time cadence via the event heap
+        # (event loop only — the frozen legacy loop never drains events)
+        tick_every = getattr(self.rate_matcher, "tick_every_s", None)
+        if tick_every and not self.legacy_loop:
+            self.events.push(self.now + tick_every, EV_REBALANCE)
         try:
             while True:
                 if san is not None:
@@ -448,12 +571,17 @@ class Cluster:
                 horizon = self.now if until is None \
                     else min(self.now, until)
                 for r in workload.poll(horizon):
-                    served.append(r)
+                    if keep_served:
+                        served.append(r)
                     self.queue.append(r)    # chronological; requeues stay
                     #                         at the front (reset_for_requeue)
+                    if metrics is not None:
+                        metrics.on_arrival(r, self.now)
                     if san is not None:
                         san.on_arrival(r, self.now)
                 progressed = self._step()
+                if metrics is not None:
+                    metrics.on_round(self)
                 if self.now > max_wall_s:
                     break
                 if self.rate_matcher is not None:
@@ -469,19 +597,70 @@ class Cluster:
                 break       # exhausted (or waiting on nothing: drained)
         finally:
             self._workload = None
+            self._metrics = None
         if san is not None:     # conservation only on clean exit — an
             san.on_episode_end(self, served)    # exception above already
-        return sla_metrics(served)              # carries the diagnosis
+        if metrics is not None:                 # carries the diagnosis
+            return metrics.result()
+        return sla_metrics(served)
 
     def _step(self) -> bool:
-        """One scheduling round. Returns False when everything is drained."""
+        """One scheduling round. Returns False when everything is drained.
+
+        Dispatches to the event-heap round (the default) or, under
+        ``legacy_loop=True``, to the frozen pre-heap full-fleet scan
+        (``serving/legacy_loop.py``) kept one PR for differential
+        certification — both produce byte-identical schedules."""
+        if self.legacy_loop:
+            from repro.serving.legacy_loop import legacy_step
+            return legacy_step(self)
+        return self._step_event()
+
+    def _fire_due_events(self) -> None:
+        """Drain heap events scheduled at or before ``now``. ARRIVAL events
+        are pure wake-ups (the request is already pollable); REBALANCE
+        events call the rate matcher's ``tick`` and re-arm at its
+        ``tick_every_s`` cadence. O(1) when nothing is due."""
+        ev = self.events
+        while True:
+            due = ev.pop_due(self.now)
+            if due is None:
+                return
+            t, _seq, kind, _payload = due
+            if kind == EV_REBALANCE and self.rate_matcher is not None:
+                tick = getattr(self.rate_matcher, "tick", None)
+                if tick is not None:
+                    tick(self)
+                every = getattr(self.rate_matcher, "tick_every_s", None)
+                if every:
+                    nxt = t + every
+                    if nxt <= self.now:     # idle jump skipped whole ticks:
+                        nxt = self.now + every      # resume cadence from now
+                    ev.push(nxt, EV_REBALANCE)
+
+    def _step_event(self) -> bool:
+        """The event-heap round: same three phases as the legacy scan, with
+        the fleet-width work removed — admission probes stop once the ready
+        queue is empty (``select`` is contract-bound to pick from
+        ``ready_requests()``, so the skipped probes could only return None)
+        and decode walks the occupied set instead of every engine, ordered
+        by the memoized fleet rank so the schedule is byte-identical."""
         progressed = False
+        self._fire_due_events()
 
         # 1) admission + prefill: the scheduler picks per prefill-capable
         #    engine; mixed engines also need a local decode slot to admit.
+        #    first_ready() is re-probed after each admission because prefill
+        #    advances the clock, which can ready future-dated queued
+        #    requests; a select() that returns None leaves the probe valid
+        #    (purity-checked: it touches neither the queue nor the clock).
         san = self.sanitizer
         mixed = self.pools.get(MIXED, ())
+        ready = self.first_ready() is not None
         for eng in self.prefill_capable_healthy():
+            if not ready:
+                break                   # nothing admissible: select would
+            #                             return None for every later engine
             if not eng.healthy:         # failed since the view was cached
                 continue
             if mixed and eng in mixed and not eng.has_free_slot():
@@ -499,8 +678,8 @@ class Cluster:
             try:
                 tok, cache = self.scheduler.run_prefill(self, eng, req)
             except EngineFailure:
-                self.queue.insert(0, req)
-                self._fail_engine(eng)
+                self.queue.insert(0, req)   # req was ready when selected,
+                self._fail_engine(eng)      # so the cached probe stands
                 continue
             # step_times[n0] is the prefill tick itself; piggybacked decode
             # rounds (which advance the clock on their own) append after it.
@@ -513,6 +692,7 @@ class Cluster:
                 self.sanitizer.on_prefill(req, eng, self.now)
             self.pending_insert.append((req, tok, cache, eng))
             progressed = True
+            ready = self.first_ready() is not None      # queue + clock moved
 
         # 2) placement: the router assigns each pending KV cache to a decode
         #    slot (the disaggregation hop when it crosses engines).
@@ -527,6 +707,7 @@ class Cluster:
                 still.append((req, tok, cache, src))
                 continue
             target.insert(req, cache)
+            self._occupied[id(target)] = target
             if self.sanitizer is not None:
                 self.sanitizer.on_insert(req, target, self.now)
             req._next_tok = tok
@@ -539,13 +720,28 @@ class Cluster:
             progressed = True
         self.pending_insert = still
 
-        # 3) decode: every decode-capable engine advances one token per slot
-        for eng in self.decode_capable_healthy():
-            progressed |= self.decode_round(eng)
+        # 3) decode: only engines holding requests step — the occupied set,
+        #    sorted into the fleet-scan order the legacy loop used (engines
+        #    outside the healthy view are skipped there exactly as the
+        #    legacy decode_round guard skipped them: no progress either way)
+        if self._occupied:
+            pos = self._decode_pos()
+            active = self._decode_scratch
+            active.clear()
+            for eng in self._occupied.values():
+                rank = pos.get(id(eng))
+                if rank is not None:
+                    active.append((rank, eng))
+            active.sort()       # ranks are unique: plain int-tuple sort
+            for _rank, eng in active:
+                progressed |= self.decode_round(eng)
+            active.clear()      # drop engine refs between rounds
 
         if not progressed and (self.queue or self.pending_insert):
             # stuck waiting on arrivals or capacity: advance virtual time
-            future = self.queue.next_future_arrival(self.now)
+            # to the next heap event (future-dated queued arrivals and
+            # rebalance ticks both live there), else nudge
+            future = self.events.next_wake(self.now)
             self.now = future if future is not None else self.now + 1e-3
             return True
         return progressed or bool(self.queue or self.pending_insert)
@@ -576,6 +772,10 @@ class Cluster:
                 eng.evict(slot)
                 if san is not None:
                     san.on_complete(req, self.now)
+                if self._metrics is not None:
+                    self._metrics.on_complete(req, self.now)
                 if self._workload is not None:
                     self._workload.on_complete(req, self.now)
+        if not eng.slot_req:        # drained: drop from the occupied set so
+            self._occupied.pop(id(eng), None)   # idle rounds skip it
         return True

@@ -78,6 +78,13 @@ class ElasticRateMatcher:
         self._round += 1
         if self._round % self.cfg.check_every:
             return
+        self.rebalance_now(orch)
+
+    def rebalance_now(self, orch):
+        """One straggler-drain + rebalance pass, cadence-free. Round-count
+        callers go through ``maybe_rebalance``; virtual-time callers (the
+        event loop's ``EV_REBALANCE`` tick via ``ElasticPolicy.tick``)
+        call this directly."""
         self._drain_stragglers(orch)
         backlog = orch.ready_count()
         dec = [e for e in orch.decode_pool if e.healthy]

@@ -1,0 +1,99 @@
+"""The pre-heap scheduling round, frozen for differential certification.
+
+``legacy_step`` is the ``Cluster._step`` body exactly as it shipped before
+the event-heap loop: every round scans every prefill-capable engine for
+admission and every decode-capable engine for progress, and the stuck
+branch scans the queue for the next future arrival. It is reachable via
+``Cluster(legacy_loop=True)`` so ``tests/test_fleet_scale.py`` can replay
+identical workloads through both loops and assert byte-identical token
+streams and transition traces.
+
+This module is a reference implementation, not a supported code path: it
+is excluded from the hot-path complexity budget (``analysis/hotpath.py``
+audits only the live loop) and is scheduled for removal in the next PR
+once the differential suite has certified the heap loop on the full trace
+corpus.
+"""
+from __future__ import annotations
+
+from repro.serving.cluster import MIXED, kv_bytes
+from repro.serving.common import EngineFailure
+
+
+def legacy_step(cluster) -> bool:
+    """One pre-heap scheduling round. Returns False when drained."""
+    self = cluster      # the body below is the old method, verbatim
+    progressed = False
+
+    # 1) admission + prefill: the scheduler picks per prefill-capable
+    #    engine; mixed engines also need a local decode slot to admit.
+    san = self.sanitizer
+    mixed = self.pools.get(MIXED, ())
+    for eng in self.prefill_capable_healthy():
+        if not eng.healthy:         # failed since the view was cached
+            continue
+        if mixed and eng in mixed and not eng.has_free_slot():
+            continue
+        if san is not None:
+            digest = san.state_digest(self)
+        req = self.scheduler.select(self, eng)
+        if san is not None:
+            san.check_hook_purity(self, "scheduler.select", digest)
+        if req is None:
+            continue
+        self.queue.remove(req)
+        req.prefill_start_t = max(self.now, req.arrival_t)
+        n0 = len(eng.step_times)
+        try:
+            tok, cache = self.scheduler.run_prefill(self, eng, req)
+        except EngineFailure:
+            self.queue.insert(0, req)
+            self._fail_engine(eng)
+            continue
+        # step_times[n0] is the prefill tick itself; piggybacked decode
+        # rounds (which advance the clock on their own) append after it.
+        dt = eng.step_times[n0]
+        self.now += dt
+        self.stats.prefill_busy_s += dt
+        req.first_token_t = self.now
+        req.output.append(tok)
+        if self.sanitizer is not None:
+            self.sanitizer.on_prefill(req, eng, self.now)
+        self.pending_insert.append((req, tok, cache, eng))
+        progressed = True
+
+    # 2) placement: the router assigns each pending KV cache to a decode
+    #    slot (the disaggregation hop when it crosses engines).
+    still = []
+    for req, tok, cache, src in self.pending_insert:
+        if san is not None:
+            digest = san.state_digest(self)
+        target = self.router.route(self, req, src)
+        if san is not None:
+            san.check_hook_purity(self, "router.route", digest)
+        if target is None:
+            still.append((req, tok, cache, src))
+            continue
+        target.insert(req, cache)
+        if self.sanitizer is not None:
+            self.sanitizer.on_insert(req, target, self.now)
+        req._next_tok = tok
+        if target is not src:
+            self.stats.transfers += 1
+            # one kv_bytes() per transferring request (an entry leaves
+            # pending on insert); SimCache answers from its nbytes
+            # field, the real backend walks its pytree once
+            self.stats.transferred_bytes += kv_bytes(cache)
+        progressed = True
+    self.pending_insert = still
+
+    # 3) decode: every decode-capable engine advances one token per slot
+    for eng in self.decode_capable_healthy():
+        progressed |= self.decode_round(eng)
+
+    if not progressed and (self.queue or self.pending_insert):
+        # stuck waiting on arrivals or capacity: advance virtual time
+        future = self.queue.next_future_arrival(self.now)
+        self.now = future if future is not None else self.now + 1e-3
+        return True
+    return progressed or bool(self.queue or self.pending_insert)

@@ -202,11 +202,15 @@ class LeastLoadedRouter:
     batch pressure evenly so per-step batch sizes stay balanced."""
 
     def route(self, cluster, req, src):
-        cands = [e for e in cluster.decode_capable_healthy()
-                 if e.healthy and e.has_free_slot()]
-        if not cands:
-            return None
-        return min(cands, key=lambda e: (e.active, e.engine_id))
+        best = None
+        best_key = None
+        for e in cluster.decode_capable_healthy():
+            if not e.healthy or not e.has_free_slot():
+                continue
+            key = (e.active, e.engine_id)
+            if best_key is None or key < best_key:
+                best, best_key = e, key
+        return best
 
 
 class KVLocalityRouter:
@@ -250,15 +254,27 @@ class ElasticPolicy:
     behind the ``RateMatcher`` protocol."""
 
     def __init__(self, elastic: Optional[ElasticRateMatcher] = None, *,
-                 cfg: Optional[ElasticConfig] = None):
+                 cfg: Optional[ElasticConfig] = None,
+                 tick_every_s: Optional[float] = None):
         self.elastic = elastic or ElasticRateMatcher(cfg or ElasticConfig())
+        # timed cadence: when set, the event loop schedules an
+        # EV_REBALANCE tick every tick_every_s *virtual* seconds and
+        # step() stops counting rounds — fleet-scale runs want rebalance
+        # pressure tied to traffic drift, not to round count (rounds per
+        # simulated second vary wildly with fleet occupancy)
+        self.tick_every_s = tick_every_s
 
     @property
     def moves(self) -> List[str]:
         return self.elastic.moves
 
     def step(self, cluster):
-        self.elastic.maybe_rebalance(cluster)
+        if self.tick_every_s is None:
+            self.elastic.maybe_rebalance(cluster)
+
+    def tick(self, cluster):
+        """Virtual-time rebalance (fired by the event heap)."""
+        self.elastic.rebalance_now(cluster)
 
     def on_failure(self, cluster, engine):
         self.elastic.on_failure(cluster, engine)

@@ -42,13 +42,66 @@ import numpy as np
 from repro.core.hardware import (ChipConfig, DEFAULT_SYSTEM, SystemConfig,
                                  as_system, relative_speed)
 from repro.core.paper_models import perf_llm_from_config
-from repro.core.perf_model import (Mapping, PerfLLM, decode_step_perf,
+from repro.core.perf_model import (Mapping, OP_LATENCY, PerfLLM,
+                                   _compute_time, _weight_bytes_per_chip,
+                                   decode_step_perf, kv_shard_chips,
                                    prefill_perf)
 from repro.serving.common import EngineFailure, PrefixCache
 
 # counting-rng stride (Knuth's multiplicative hash constant): consecutive
 # token ids decorrelate without any per-token state beyond the counter
 _TOK_STRIDE = 2654435761
+
+
+class StepLog:
+    """Step-time history with an optional memory bound.
+
+    List-compatible for every access the loop and tests perform (append,
+    ``len``, ``[i]``, ``[-1]``, slices, truthiness) with one extra
+    guarantee: *absolute* indices stay valid after trimming, because the
+    log remembers how many front entries it dropped. That preserves the
+    ``n0 = len(step_times); ...; step_times[n0]`` prefill-tick contract in
+    ``Cluster._step`` while a bounded engine (``step_history=N``) keeps at
+    least the last N entries and at most 2N — flat memory over
+    million-request fleet runs instead of one float per step forever."""
+
+    __slots__ = ("_buf", "_off", "_cap")
+
+    def __init__(self, cap: int = 0):
+        self._buf: List[float] = []
+        self._off = 0               # entries trimmed off the front
+        self._cap = int(cap)
+
+    def append(self, dt: float) -> None:
+        buf = self._buf
+        buf.append(dt)
+        if self._cap and len(buf) > 2 * self._cap:
+            drop = len(buf) - self._cap
+            del buf[:drop]
+            self._off += drop
+
+    def __len__(self) -> int:
+        return self._off + len(self._buf)
+
+    def __bool__(self) -> bool:
+        return bool(self._off or self._buf)
+
+    def __iter__(self):
+        return iter(self._buf)      # retained window only
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            start, stop, step = i.indices(len(self))
+            a = max(start - self._off, 0)
+            b = max(stop - self._off, 0)
+            return self._buf[a:b:step]
+        if i < 0:
+            return self._buf[i]
+        j = i - self._off
+        if j < 0:
+            raise IndexError(f"step_times[{i}] trimmed (history cap "
+                             f"{self._cap}, {self._off} dropped)")
+        return self._buf[j]
 
 
 def _token_base(prompt: np.ndarray) -> int:
@@ -85,6 +138,120 @@ class SimCalibration:
         return f"p{self.prefill_scale:.3g}/d{self.decode_scale:.3g}"
 
 
+# ---------------------------------------------------------------------------
+# shared roofline memo tables + vectorized grid fill
+#
+# Every SimEngine with the same (PerfLLM, SystemConfig, Mapping) — all
+# frozen, hashable dataclasses — sees the same roofline, so their memo
+# tables are shared process-wide: a homogeneous 1k-engine fleet evaluates
+# each distinct (batch, kv) decode point once total. Tables store RAW
+# roofline seconds; per-engine calibration and speed factors are applied
+# after lookup.
+
+_GROUP_TABLES: Dict[Tuple[PerfLLM, SystemConfig, Mapping],
+                    Tuple[Dict[int, float], Dict[Tuple[int, int], float]]] \
+    = {}
+
+
+def _group_tables(perf: PerfLLM, sys_: SystemConfig, map_: Mapping
+                  ) -> Tuple[Dict[int, float], Dict[Tuple[int, int], float]]:
+    key = (perf, sys_, map_)
+    tabs = _GROUP_TABLES.get(key)
+    if tabs is None:
+        tabs = ({}, {})         # (prefill memo, decode memo)
+        _GROUP_TABLES[key] = tabs
+    return tabs
+
+
+def decode_grid(model: PerfLLM, m: Mapping, batch: int,
+                kv_lens: np.ndarray, sys_=None) -> np.ndarray:
+    """Vectorized twin of ``decode_step_perf(...).step_s`` over many kv
+    lengths at one batch size: one NumPy pass instead of one scalar
+    roofline call per point.
+
+    Only the attention-flops and KV-bytes terms depend on kv; they are
+    broadcast here in the scalar code's exact operation order (float64
+    throughout), and every kv-independent term comes from the *same*
+    helpers the scalar path calls — so each grid entry is bit-identical to
+    ``decode_step_perf`` and priming the shared memo cannot perturb a
+    schedule (asserted by ``tests/test_fleet_scale.py``)."""
+    if sys_ is None:
+        sys_ = DEFAULT_SYSTEM
+    kv = np.asarray(kv_lens, dtype=np.float64)
+    b = batch
+    if model.attention == "none":
+        # rwkv: O(1) state update, kv-independent
+        attn_flops = (4.0 * model.num_layers * model.d_model * model.dh
+                      ) * b + 0.0 * kv
+    else:
+        span = kv
+        if model.sliding_window:
+            span = np.minimum(kv, float(model.sliding_window))
+        if model.attention == "mla":
+            rank = model.mla_kv_rank + model.mla_rope_dim
+            attn_flops = (4.0 * model.num_layers * model.num_heads * rank
+                          * span) * b
+        else:
+            attn_flops = (4.0 * model.num_layers * model.num_heads
+                          * model.dh * span) * b
+
+    w_bytes = _weight_bytes_per_chip(model, m, b)
+    kv_total_bytes = b * kv * model.kv_bytes_per_token()
+    kv_bytes = kv_total_bytes / kv_shard_chips(model, m)
+    act_bytes = (8.0 * b * model.d_model * model.bytes_act
+                 * model.num_layers / (m.tp * m.pp))
+    mem_bytes = w_bytes + kv_bytes + act_bytes
+
+    compute_s = _compute_time(model, m, b, b, attn_flops, sys_)
+    memory_s = mem_bytes / sys_.chip.hbm_bw
+
+    coll_bytes = 0.0
+    n_ops = 0
+    b_local = b / m.dp_attn
+    if m.tp > 1:
+        coll_bytes += (2 * model.num_layers * 2.0 * b_local * model.d_model
+                       * model.bytes_act * (m.tp - 1) / m.tp)
+        n_ops += 2 * model.num_layers
+    if model.is_moe and m.ep > 1:
+        coll_bytes += (2 * model.num_layers * (b * model.top_k / m.ep)
+                       * model.d_model * model.bytes_act * (m.ep - 1) / m.ep)
+        n_ops += 2 * model.num_layers
+    if m.pp > 1:
+        coll_bytes += ((m.pp - 1) * b_local * model.d_model
+                       * model.bytes_act / m.pp)
+        n_ops += m.pp - 1
+    collective_s = coll_bytes / sys_.chip.ici_bw + n_ops * OP_LATENCY
+
+    exposed_s = collective_s * (1.0 - sys_.collective_overlap)
+    return np.maximum(compute_s, memory_s) + exposed_s
+
+
+def prime_decode(engines, kv_max: int, *, kv_min: int = 1,
+                 batches=None) -> int:
+    """Pre-fill the shared decode memo for each homogeneous engine group
+    with one vectorized roofline pass per (group, batch size). Serving then
+    reduces every decode tick to a dict lookup. Returns the number of grid
+    points added; existing entries are never overwritten (they are already
+    bit-equal). Safe to call at any time — before, between, or mid-run."""
+    by_key: Dict[Tuple[PerfLLM, SystemConfig, Mapping], int] = {}
+    for e in engines:
+        k = (e._perf, e._sys, e._map)
+        if e.slots > by_key.get(k, 0):
+            by_key[k] = e.slots
+    kv = np.arange(max(kv_min, 1), max(kv_max, kv_min) + 1, dtype=np.int64)
+    added = 0
+    for (perf, sys_, map_), bmax in by_key.items():
+        _pre, dec = _group_tables(perf, sys_, map_)
+        for b in (batches if batches is not None else range(1, bmax + 1)):
+            grid = decode_grid(perf, map_, max(int(b), 1), kv, sys_)
+            for kv_len, t in zip(kv.tolist(), grid.tolist()):
+                key = (b, kv_len)
+                if key not in dec:
+                    dec[key] = t
+                    added += 1
+    return added
+
+
 class SimEngine:
     """Drop-in ``Engine`` twin: O(1) bookkeeping steps on a roofline clock.
 
@@ -100,7 +267,8 @@ class SimEngine:
                  *, slots: int = 8, capacity: int = 256,
                  chunk_size: int = 0, chip: Optional[ChipConfig] = None,
                  speed_factor: Optional[float] = None,
-                 calibration: Optional[SimCalibration] = None):
+                 calibration: Optional[SimCalibration] = None,
+                 step_history: int = 0):
         self.engine_id = engine_id
         self.cfg = cfg
         self.params = params
@@ -109,7 +277,10 @@ class SimEngine:
         self.chunk_size = chunk_size
         self.healthy = True
         self.clock = 0.0
-        self.step_times: List[float] = []
+        # step_history=0 keeps every step time (list semantics, the
+        # default); N keeps the last N..2N with absolute indices intact —
+        # fleet-scale runs opt in so memory stays flat over 1e6+ steps
+        self.step_times = StepLog(step_history)
         self._slow_factor = 1.0
         self.chip = chip
         self.hardware = chip.name if chip is not None else "uniform"
@@ -140,8 +311,14 @@ class SimEngine:
         self.slot_req: Dict[int, Any] = {}
         self._slot_pos: Dict[int, int] = {}     # slot -> kv tokens resident
         self._slot_tok: Dict[int, Tuple[int, int]] = {}  # slot -> (base, i)
-        self._prefill_memo: Dict[int, float] = {}
-        self._decode_memo: Dict[Tuple[int, int], float] = {}
+        # roofline memo tables are SHARED across every engine with the same
+        # (model, system, mapping) roofline — a 1k-engine homogeneous fleet
+        # evaluates each distinct (batch, kv) point once, not once per
+        # engine. Tables hold RAW roofline seconds; calibration scale and
+        # speed factors are applied after lookup, so engines with different
+        # calibrations share safely.
+        self._prefill_memo, self._decode_memo = _group_tables(
+            self._perf, self._sys, self._map)
         self._payload = self._payload_bytes()   # constant per engine
 
     # ---- fault/straggler injection hooks (same seams as Engine) ---------

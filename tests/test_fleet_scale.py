@@ -1,0 +1,315 @@
+"""Differential certification of the event-heap loop (ISSUE 8 tentpole).
+
+The heap loop (``Cluster._step_event``) replaced the legacy full-fleet
+scan; the legacy body is kept for one PR behind
+``Cluster(legacy_loop=True)`` precisely so this suite can replay identical
+workloads through both and assert byte-identical results:
+
+  1. schedule parity on every checked-in trace (``tests/data/traces/``)
+     under several policy combinations: sha256 of the per-request token
+     streams, sanitizer stream parity (content included), transition
+     traces, metrics, and transfer counts must all match;
+  2. the same parity under ``REPRO_SANITIZE=1`` (env-gated sanitizer) and
+     under mid-run engine failure + requeue;
+  3. ``EventQueue`` ordering properties: deterministic tie-break by
+     sequence number, total and stable pop order under interleaved
+     push/pop (verified against a reference heap; hypothesis-driven when
+     available, seeded-random always);
+  4. conservation — arrivals == completions + in-flight (+ none lost to
+     failures: requeues re-serve) — at episode end for fleet sizes up to
+     1k engines;
+  5. the vectorized roofline grid (``decode_grid`` / ``prime_decode``) is
+     bit-identical to the scalar path, so priming cannot perturb a
+     schedule.
+
+Everything runs on ``SimEngine`` (virtual clock): deterministic and fast
+enough to replay every trace x combo x loop in seconds.
+"""
+import hashlib
+import heapq
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.paper_models import PAPER_MODELS
+from repro.core.perf_model import Mapping, decode_step_perf
+from repro.analysis.sanitizer import assert_stream_parity
+from repro.serving.cluster import Cluster, EventQueue
+from repro.serving.metrics import StreamingMetrics
+from repro.serving.policies import (ElasticPolicy, LeastLoadedRouter,
+                                    PriorityScheduler)
+from repro.serving.simengine import SimEngine, decode_grid, prime_decode
+from repro.workloads import (FixedShape, OpenLoopWorkload, Poisson,
+                             TraceReplay)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+TRACE_DIR = pathlib.Path(__file__).parent / "data" / "traces"
+TRACES = ("burst", "diurnal", "sessions", "tiers", "fleet_diurnal")
+VOCAB = 97
+PERF = PAPER_MODELS["llama-3.1-8b"]
+
+# fresh policy objects per cluster: routers/schedulers carry rotation
+# state across episodes, so sharing one instance between the legacy and
+# heap runs would hand the second run a pre-rotated policy
+COMBOS = {
+    "default": lambda: {},
+    "priority+leastloaded": lambda: {"scheduler": PriorityScheduler(),
+                                     "router": LeastLoadedRouter()},
+    "elastic": lambda: {"rate_matcher": ElasticPolicy()},
+}
+
+
+def _fleet(cap):
+    return {"prefill": [SimEngine(0, PERF, slots=4, capacity=cap),
+                        SimEngine(1, PERF, slots=4, capacity=cap)],
+            "decode": [SimEngine(10, PERF, slots=4, capacity=cap),
+                       SimEngine(11, PERF, slots=4, capacity=cap),
+                       SimEngine(12, PERF, slots=4, capacity=cap)]}
+
+
+def _serve_trace(name, legacy, combo="default", sanitize=True,
+                 fail_engine=False):
+    replay = TraceReplay(TRACE_DIR / f"{name}.jsonl", vocab=VOCAB)
+    cap = replay.max_context() + 8
+    cl = Cluster(_fleet(cap), sanitize=sanitize, legacy_loop=legacy,
+                 **COMBOS[combo]())
+    if fail_engine:     # one deterministic mid-run failure + requeue
+        eng = cl.pools["decode"][0]
+        orig = eng.decode_step
+        state = {"steps": 0}
+
+        def flaky(toks):
+            state["steps"] += 1
+            if state["steps"] == 3:
+                eng.fail()
+            return orig(toks)
+        eng.decode_step = flaky
+    m = cl.serve(replay, max_wall_s=1e6)
+    return cl, m, replay
+
+
+def _stream_sha(replay):
+    h = hashlib.sha256()
+    for r in sorted(replay.requests, key=lambda r: r.rid):
+        h.update(f"{r.rid}:{list(r.output)};".encode())
+    return h.hexdigest()
+
+
+def _assert_identical(name, combo="default", sanitize=True,
+                      fail_engine=False):
+    ca, ma, ra = _serve_trace(name, True, combo, sanitize, fail_engine)
+    cb, mb, rb = _serve_trace(name, False, combo, sanitize, fail_engine)
+    assert ma["completed"] == len(ra.requests) > 0    # parity is not vacuous
+    assert _stream_sha(ra) == _stream_sha(rb), \
+        f"{name}/{combo}: token streams diverged"
+    assert ma == mb, f"{name}/{combo}: metrics diverged"
+    assert ca.stats.transfers == cb.stats.transfers
+    assert ca.stats.engine_failures == cb.stats.engine_failures
+    if ca.sanitizer is not None:
+        assert_stream_parity(ca.sanitizer, cb.sanitizer, content=True)
+        assert list(ca.sanitizer.trace) == list(cb.sanitizer.trace), \
+            f"{name}/{combo}: transition traces diverged"
+
+
+# ---------------------------------------------------------------------------
+# 1+2) schedule parity, legacy vs heap
+
+
+@pytest.mark.parametrize("combo", sorted(COMBOS))
+@pytest.mark.parametrize("name", TRACES)
+def test_legacy_vs_heap_byte_identical_on_trace(name, combo):
+    _assert_identical(name, combo)
+
+
+@pytest.mark.parametrize("name", TRACES)
+def test_legacy_vs_heap_identical_under_env_sanitizer(name, monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    _assert_identical(name, sanitize=None)   # None -> env gate decides
+    # the env gate actually armed the sanitizer (guards the guard)
+    cl, _, _ = _serve_trace(name, False, sanitize=None)
+    assert cl.sanitizer is not None
+
+
+def test_legacy_vs_heap_identical_under_engine_failure():
+    _assert_identical("burst", fail_engine=True)
+    ca, _, _ = _serve_trace("burst", True, fail_engine=True)
+    assert ca.stats.engine_failures == 1     # the injection actually fired
+
+
+# ---------------------------------------------------------------------------
+# 3) EventQueue ordering properties
+
+
+def _check_against_reference(ops):
+    """Drive an EventQueue and a reference heap through one op sequence.
+
+    ``ops``: list of (kind, time) with kind 0..2 = push (three event
+    kinds), 3 = pop. Verifies every pop returns exactly the reference
+    minimum by (time, seq) — total, stable, deterministic order."""
+    q = EventQueue()
+    ref = []
+    kinds = ("arrival", "rebalance", "other")
+    for kind, t in ops:
+        if kind == 3:
+            if not ref:
+                continue
+            got = q.pop()
+            want = heapq.heappop(ref)
+            assert (got[0], got[1]) == (want[0], want[1])
+            assert got[2] == want[2]
+        else:
+            seq = q.push(t, kinds[kind], None)
+            heapq.heappush(ref, (float(t), seq, kinds[kind]))
+    while ref:
+        got = q.pop()
+        want = heapq.heappop(ref)
+        assert (got[0], got[1], got[2]) == want
+    assert len(q) == 0 and not q
+
+
+def test_event_queue_ties_break_by_push_sequence():
+    q = EventQueue()
+    seqs = [q.push(1.0, "arrival", i) for i in range(200)]
+    assert seqs == sorted(seqs)             # monotone sequence numbers
+    pops = [q.pop() for _ in range(200)]
+    assert [p[3] for p in pops] == list(range(200))     # FIFO among ties
+    assert [p[1] for p in pops] == seqs
+
+
+def test_event_queue_interleaved_random_matches_reference():
+    for seed in range(25):
+        rng = np.random.default_rng(seed)
+        ops = [(int(rng.integers(0, 4)), float(rng.integers(0, 40)))
+               for _ in range(400)]
+        _check_against_reference(ops)
+
+
+def test_event_queue_twin_runs_identical():
+    """Same op sequence on two queues -> identical pop streams (no hidden
+    state: pop order is a pure function of the push history)."""
+    rng = np.random.default_rng(7)
+    ops = [(int(rng.integers(0, 4)), float(rng.integers(0, 20)))
+           for _ in range(300)]
+
+    def run(ops):
+        q = EventQueue()
+        out = []
+        for kind, t in ops:
+            if kind == 3:
+                if q:
+                    out.append(q.pop())
+            else:
+                q.push(t, "k", kind)
+        while q:
+            out.append(q.pop())
+        return out
+    assert run(ops) == run(ops)
+
+
+def test_event_queue_pop_due_and_next_wake():
+    q = EventQueue()
+    q.push(5.0, "arrival", "a")
+    q.push(2.0, "arrival", "b")
+    q.push(9.0, "rebalance", "c")
+    assert q.pop_due(1.0) is None           # nothing due yet: O(1) no-op
+    assert q.pop_due(2.0)[3] == "b"
+    assert q.pop_due(2.0) is None
+    # next_wake drops stale (<= now) entries and returns the next future t
+    q.push(3.0, "arrival", "stale")
+    assert q.next_wake(4.0) == 5.0
+    assert len(q) == 2                      # 'stale' was discarded
+    assert q.next_wake(100.0) is None
+    assert len(q) == 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=60)
+    @given(st.lists(st.tuples(st.integers(0, 3),
+                              st.floats(0.0, 1e6, allow_nan=False)),
+                    max_size=400))
+    def test_event_queue_hypothesis_interleaved(ops):
+        _check_against_reference(ops)
+
+
+# ---------------------------------------------------------------------------
+# 4) conservation at episode end, fleets up to 1k engines
+
+
+def _conservation_fleet(n_engines, seed):
+    n_pre = max(n_engines // 5, 1)
+    pools = {"prefill": [SimEngine(i, PERF, slots=2, capacity=64)
+                         for i in range(n_pre)],
+             "decode": [SimEngine(10_000 + i, PERF, slots=4, capacity=64)
+                        for i in range(n_engines - n_pre)]}
+    # sanitize=True: ClusterSanitizer.on_episode_end asserts the full
+    # conservation invariant (arrivals == completions + in-flight, no
+    # token loss across requeues) on top of the checks below
+    cl = Cluster(pools, sanitize=True)
+    n = 500
+    w = OpenLoopWorkload(Poisson(50.0), FixedShape(24, 6), vocab=VOCAB,
+                         seed=seed, max_requests=n)
+    sm = StreamingMetrics()
+    m = cl.serve(w, metrics=sm)
+    assert m["arrived"] == n
+    assert m["completed"] == n              # drained: nothing in flight
+    assert not cl.queue and not cl.pending_insert
+    assert all(not e.slot_req for e in cl.engines())
+
+
+@pytest.mark.parametrize("n_engines", [2, 3, 17, 129, 1000])
+def test_conservation_over_fleet_sizes(n_engines):
+    _conservation_fleet(n_engines, seed=n_engines)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=8)
+    @given(st.integers(min_value=2, max_value=1000),
+           st.integers(min_value=0, max_value=2 ** 16))
+    def test_conservation_hypothesis_fleets(n_engines, seed):
+        _conservation_fleet(n_engines, seed)
+
+
+# ---------------------------------------------------------------------------
+# 5) vectorized roofline grid == scalar roofline, bit for bit
+
+
+def test_decode_grid_bit_equal_to_scalar():
+    m = Mapping(chips=1)
+    kv = np.arange(1, 1025, dtype=np.int64)
+    for perf in PAPER_MODELS.values():
+        for b in (1, 2, 5, 8):
+            grid = decode_grid(perf, m, b, kv)
+            for k in (1, 2, 63, 511, 1024):
+                assert grid[k - 1] == decode_step_perf(perf, m, b, k).step_s, \
+                    (perf.name, b, k)
+
+
+def test_prime_decode_fills_shared_table_and_preserves_schedule():
+    a = SimEngine(0, PERF, slots=4, capacity=64)
+    b = SimEngine(1, PERF, slots=8, capacity=64)
+    assert a._decode_memo is b._decode_memo     # one table per roofline
+    prime_decode([a, b], 64)
+    for key in ((1, 1), (8, 64), (3, 17)):
+        assert key in a._decode_memo
+        raw = a._decode_memo[key]
+        assert raw == decode_step_perf(PERF, a._map, key[0], key[1],
+                                       a._sys).step_s
+
+    def run():
+        cl = Cluster(_fleet(64), sanitize=True)
+        w = OpenLoopWorkload(Poisson(40.0), FixedShape(24, 6), vocab=VOCAB,
+                             seed=5, max_requests=200)
+        m = cl.serve(w)
+        return cl.sanitizer, m
+    sa, ma = run()
+    prime_decode([e for p in _fleet(64).values() for e in p], 256)
+    sb, mb = run()                  # after (re)priming: identical schedule
+    assert ma == mb
+    assert_stream_parity(sa, sb, content=True)

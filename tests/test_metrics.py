@@ -1,0 +1,247 @@
+"""Incremental-metrics certification (ISSUE 8 satellite).
+
+``repro.serving.metrics`` replaces retain-everything ``sla_metrics`` at
+fleet scale, so each accumulator is held to the batch computation it
+stands in for:
+
+  - ``QuantileSketch`` p50/p99 within 1% (relative) of exact numpy
+    percentiles on 1M-sample streams, scalar and vectorized ingest
+    agreeing bucket-for-bucket, memory fixed;
+  - ``WindowedRate`` window sums exactly equal to a from-scratch batch
+    recomputation over the same bin grid (integer counts: no float
+    drift), lifetime totals exact;
+  - ``StreamingMetrics.result()`` vs ``request.sla_metrics`` on the same
+    deterministic serve: exact keys exact, quantile keys within the
+    sketch's accuracy;
+  - memory flatness: traced allocations stop growing between the 10k-th
+    and 90k-th completion of a 100k-request serve (the fleet-scale
+    promise ``benchmarks/fleet_scale.py`` banks on), with ``StepLog``
+    bounding the one per-step accumulator engines keep.
+"""
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core.paper_models import PAPER_MODELS
+from repro.serving.cluster import Cluster
+from repro.serving.metrics import QuantileSketch, StreamingMetrics, WindowedRate
+from repro.serving.simengine import SimEngine, StepLog
+from repro.workloads import FixedShape, OpenLoopWorkload, Poisson
+
+PERF = PAPER_MODELS["llama-3.1-8b"]
+
+
+# ---------------------------------------------------------------------------
+# QuantileSketch
+
+
+@pytest.mark.parametrize("dist", ["lognormal", "exponential", "uniform"])
+def test_sketch_p50_p99_within_1pct_of_numpy_on_1m_samples(dist):
+    rng = np.random.default_rng(42)
+    xs = {"lognormal": lambda: rng.lognormal(-2.0, 1.2, 1_000_000),
+          "exponential": lambda: rng.exponential(0.05, 1_000_000),
+          "uniform": lambda: rng.uniform(1e-4, 3.0, 1_000_000)}[dist]()
+    sk = QuantileSketch()
+    sk.add_many(xs)
+    assert sk.count == 1_000_000
+    for q in (50, 90, 99):
+        exact = float(np.percentile(xs, q))
+        assert abs(sk.quantile(q) - exact) / exact < 0.01, (dist, q)
+
+
+def test_sketch_scalar_add_matches_vectorized_add_many():
+    rng = np.random.default_rng(3)
+    xs = rng.lognormal(-3.0, 1.0, 20_000)
+    a, b = QuantileSketch(), QuantileSketch()
+    a.add_many(xs)
+    for x in xs:
+        b.add(float(x))
+    assert np.array_equal(a._counts, b._counts)     # same buckets exactly
+    assert a.count == b.count == xs.size
+    assert a.quantile(99) == b.quantile(99)
+
+
+def test_sketch_memory_is_fixed():
+    sk = QuantileSketch()
+    size0 = sk.nbytes
+    assert size0 < 64 * 1024        # ~3k int64 buckets
+    sk.add_many(np.random.default_rng(0).exponential(1.0, 1_000_000))
+    assert sk.nbytes == size0       # ingest never grows the sketch
+
+
+def test_sketch_edge_cases():
+    sk = QuantileSketch()
+    assert np.isnan(sk.quantile(50))            # empty
+    sk.add(0.0)                                 # zero -> underflow bucket
+    sk.add(-1.0)                                # negative -> underflow too
+    assert sk.quantile(50) == sk._min
+    sk2 = QuantileSketch(max_value=10.0)
+    sk2.add(1e12)                               # beyond range: clamps,
+    assert np.isfinite(sk2.quantile(99))        # never throws or inf
+
+
+# ---------------------------------------------------------------------------
+# WindowedRate
+
+
+def _batch_window(events, window_s, bins):
+    """From-scratch recomputation of the ring sum: events whose bin index
+    falls in the ``bins`` bins ending at the newest event's bin."""
+    bin_s = window_s / bins
+    cur = int(events[-1][0] // bin_s)
+    lo = cur - bins + 1
+    return sum(n for t, n in events if lo <= int(t // bin_s) <= cur)
+
+
+def test_windowed_rate_matches_batch_recompute():
+    rng = np.random.default_rng(11)
+    for trial in range(5):
+        window_s, bins = [(60.0, 60), (10.0, 4), (3.0, 3), (1.0, 10),
+                          (100.0, 7)][trial]
+        wr = WindowedRate(window_s, bins)
+        t = 0.0
+        events = []
+        for _ in range(800):
+            t += float(rng.exponential(window_s / 40.0))
+            n = int(rng.integers(1, 5))
+            events.append((t, n))
+            wr.add(t, n)
+            want = _batch_window(events, window_s, bins)
+            assert wr.window_total() == want            # exact: int counts
+            assert wr.rate() == want / window_s
+        tot = wr.totals()
+        assert tot["total"] == sum(n for _, n in events)
+        assert tot["t_first"] == events[0][0]
+        assert tot["t_last"] == events[-1][0]
+        assert wr.peak_rate >= wr.rate() > 0.0
+
+
+def test_windowed_rate_big_gap_empties_window():
+    wr = WindowedRate(10.0, 10)
+    for t in (0.0, 1.0, 2.0):
+        wr.add(t)
+    assert wr.window_total() == 3
+    wr.add(1e6)                     # jump >> window: only the new event
+    assert wr.window_total() == 1
+    assert wr.totals()["total"] == 4
+
+
+# ---------------------------------------------------------------------------
+# StreamingMetrics vs batch sla_metrics
+
+
+def _fleet():
+    return {"prefill": [SimEngine(0, PERF, slots=4, capacity=64),
+                        SimEngine(1, PERF, slots=4, capacity=64)],
+            "decode": [SimEngine(10, PERF, slots=8, capacity=64),
+                       SimEngine(11, PERF, slots=8, capacity=64)]}
+
+
+def _workload(n):
+    return OpenLoopWorkload(Poisson(80.0), FixedShape(24, 6), vocab=101,
+                            seed=17, max_requests=n)
+
+
+def test_streaming_result_matches_batch_sla_metrics():
+    # two serves of the same deterministic virtual-time episode: one batch
+    # (requests retained, sla_metrics over the list), one streaming
+    batch = Cluster(_fleet()).serve(_workload(2_000))
+    sm = StreamingMetrics()
+    stream = Cluster(_fleet()).serve(_workload(2_000), metrics=sm)
+    assert stream is not batch and stream == sm.result()
+    exact = ("completed", "queue_wait_s", "sla_attainment", "tokens_per_s")
+    for k in exact:
+        assert stream[k] == batch[k], k
+    for k in ("p50_ftl_s", "p99_ftl_s", "p50_ttl_s", "p99_ttl_s",
+              "tps_per_user"):
+        assert stream[k] == pytest.approx(batch[k], rel=0.011), k
+    # fleet extras ride along without colliding with sla_metrics keys
+    assert stream["arrived"] == stream["completed"] == 2_000
+    assert stream["peak_rps"] >= stream["window_rps"] >= 0.0
+    for pool in ("prefill", "decode"):
+        assert 0.0 <= stream[f"occupancy_{pool}"] <= 1.0
+    assert stream["occupancy_decode"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# memory flatness over a 100k-request serve
+
+
+class _Milestones(StreamingMetrics):
+    """Record traced allocation size at completion milestones."""
+
+    def __init__(self, marks):
+        super().__init__(window_s=5.0, occupancy_every_s=1.0)
+        self.marks = dict.fromkeys(marks)
+
+    def on_complete(self, req, now):
+        super().on_complete(req, now)
+        if self.completed in self.marks:
+            self.marks[self.completed] = tracemalloc.get_traced_memory()[0]
+
+
+def test_memory_stays_flat_over_100k_request_serve():
+    n = 100_000
+    pools = {"prefill": [SimEngine(i, PERF, slots=4, capacity=64,
+                                   step_history=64) for i in range(2)],
+             "decode": [SimEngine(10 + i, PERF, slots=8, capacity=64,
+                                  step_history=64) for i in range(6)]}
+    cl = Cluster(pools, sanitize=False)
+    w = OpenLoopWorkload(Poisson(500.0), FixedShape(16, 4), vocab=101,
+                         seed=23, max_requests=n)
+    sm = _Milestones(marks=(10_000, 90_000))
+    tracemalloc.start()
+    try:
+        m = cl.serve(w, metrics=sm)
+    finally:
+        tracemalloc.stop()
+    assert m["completed"] == n
+    early, late = sm.marks[10_000], sm.marks[90_000]
+    assert early is not None and late is not None
+    # 80k further requests may not grow live memory by more than a fixed
+    # slack (allocator noise): completions are not retained, step logs are
+    # bounded, sketches and rings are fixed-size
+    assert late <= early + 256 * 1024, \
+        f"live allocations grew {(late - early) / 1024:.0f} KiB " \
+        f"between completion 10k and 90k"
+
+
+# ---------------------------------------------------------------------------
+# StepLog (the bounded per-engine step-time accumulator)
+
+
+def test_steplog_unbounded_by_default():
+    log = StepLog()
+    for i in range(1000):
+        log.append(float(i))
+    assert len(log) == 1000
+    assert log[0] == 0.0 and log[999] == 999.0 and log[-1] == 999.0
+
+
+def test_steplog_bounds_memory_but_keeps_absolute_indices():
+    log = StepLog(64)
+    for i in range(10_000):
+        log.append(float(i))
+    assert len(log) == 10_000               # logical length never shrinks
+    assert 64 <= len(log._buf) <= 128       # retained window: [cap, 2*cap]
+    assert log[-1] == 9999.0
+    assert log[9999] == 9999.0              # absolute index, post-trim
+    n0 = len(log)
+    log.append(123.5)
+    assert log[n0] == 123.5                 # the prefill-tick contract
+    with pytest.raises(IndexError):
+        log[0]                              # trimmed entries say so loudly
+    tail = log[len(log) - 3:]
+    assert tail == [9998.0, 9999.0, 123.5]
+    assert list(log) == log._buf            # iteration = retained window
+    assert bool(log)
+    assert not StepLog(4)
+
+
+def test_steplog_engine_default_is_unbounded():
+    e = SimEngine(0, PERF, slots=2, capacity=32)
+    assert isinstance(e.step_times, StepLog)
+    assert e.step_times._cap == 0
+    e2 = SimEngine(1, PERF, slots=2, capacity=32, step_history=8)
+    assert e2.step_times._cap == 8

@@ -1,10 +1,12 @@
 """Trace-backed regression corpus (ROADMAP open item).
 
-Four small checked-in JSONL traces (``tests/data/traces/``, regenerated
+Five small checked-in JSONL traces (``tests/data/traces/``, regenerated
 only via ``scripts/gen_trace_corpus.py``) cover the workload families the
 paper's findings hinge on: a prefill-heavy burst, diurnal arrivals, a
-recorded multi-turn session run, and a superposed SLA-tier mix. The
-goldens pin three things:
+recorded multi-turn session run, a superposed SLA-tier mix, and a
+compressed multi-day diurnal fleet trace (``fleet_diurnal``, whose golden
+additionally pins per-hour arrival marginals). The goldens pin three
+things:
 
   1. the trace files themselves (sha256 + summary marginals vs
      ``golden.json``),
@@ -29,7 +31,7 @@ from repro.serving.policies import PriorityScheduler
 from repro.workloads import TraceReplay, materialize
 
 TRACE_DIR = pathlib.Path(__file__).parent / "data" / "traces"
-TRACES = ("burst", "diurnal", "sessions", "tiers")
+TRACES = ("burst", "diurnal", "sessions", "tiers", "fleet_diurnal")
 VOCAB = 97
 
 # must match scripts/gen_trace_corpus.py (the corpus embeds this model's
@@ -82,6 +84,22 @@ def test_summary_marginals_match_golden(name, golden):
     assert s.isl == pytest.approx(want["isl"], abs=1e-6)
     assert s.osl == pytest.approx(want["osl"], abs=1e-6)
     assert s.rate == pytest.approx(want["rate"], abs=1e-6)
+
+
+def test_fleet_diurnal_hourly_marginals_match_golden(golden):
+    """The compressed fleet trace must reproduce its per-hour arrival
+    marginals exactly — the rate swing is the property the fleet-scale
+    benchmark's diurnal workload is standing in for."""
+    g = golden["fleet_diurnal"]
+    hour_s = 86400.0 / g["compression"] / 24.0
+    reqs = materialize(TraceReplay(_path("fleet_diurnal"), vocab=VOCAB))
+    counts = [0] * (int(g["days"]) * 24)
+    for r in reqs:
+        b = min(int(r.arrival_t // hour_s), len(counts) - 1)
+        counts[b] += 1
+    assert counts == g["hourly_arrivals"]
+    assert sum(counts) == g["n_requests"]
+    assert max(counts) > min(counts)    # the diurnal swing is visible
 
 
 def _serve(name, params, base_id):
