@@ -8,13 +8,21 @@ with every O(1)-memory feature engaged: streaming metrics (no retained
 requests), bounded per-engine step history, the lazy one-event workload
 generator, and the vectorized roofline grid priming the shared decode memo.
 
-Asserts two floors and emits ``BENCH_fleet.json``:
+The episode runs twice — untraced, then with a ``TraceRecorder`` attached
+— to gate observability overhead: the traced run must finish within
+``--overhead-limit`` of the untraced wall time and produce the *same*
+metrics dict (schedule identity: the recorder observes, never perturbs).
+The untraced run is the one held to the floors, so tracing-off performance
+can never regress behind tracing work.
+
+Asserts the gates and emits ``BENCH_fleet.json``:
 
   - wall-clock requests/s >= --floor (the event loop must not regress into
     fleet-width scans: idle engines cost zero work)
   - peak RSS <= --rss-ceiling MB (memory stays flat over 1e6 requests)
+  - traced wall time <= (1 + overhead limit) x untraced, identical metrics
 
-  PYTHONPATH=src python benchmarks/fleet_scale.py           # full, ~2-4 min
+  PYTHONPATH=src python benchmarks/fleet_scale.py           # full, ~4-8 min
   PYTHONPATH=src python benchmarks/fleet_scale.py --smoke   # CI, seconds
 """
 import argparse
@@ -28,6 +36,10 @@ RPS_FLOOR = 2500.0          # wall-clock completed requests/s (full run;
 RSS_CEILING_MB = 512.0      # peak RSS over the whole process (measured
 #                             ~50 MB: streaming metrics keep memory flat)
 SMOKE_RPS_FLOOR = 400.0     # smoke fleet is 40x smaller; floor scaled too
+OVERHEAD_LIMIT = 0.05       # traced-vs-untraced wall overhead (full run)
+SMOKE_OVERHEAD_LIMIT = 0.35  # smoke episodes are seconds long and noise-
+#                              dominated (allocator warm-up, turbo drift);
+#                              the ≤5% claim is gated on the full run
 
 
 def main(argv=None):
@@ -37,6 +49,7 @@ def main(argv=None):
     from repro.serving.metrics import StreamingMetrics
     from repro.serving.policies import ElasticPolicy
     from repro.serving.simengine import SimEngine, prime_decode
+    from repro.serving.tracing import TraceRecorder
     from repro.workloads import Diurnal, LognormalShape, OpenLoopWorkload
 
     ap = argparse.ArgumentParser()
@@ -51,6 +64,9 @@ def main(argv=None):
     ap.add_argument("--floor", type=float, default=None,
                     help="minimum wall-clock requests/s")
     ap.add_argument("--rss-ceiling-mb", type=float, default=RSS_CEILING_MB)
+    ap.add_argument("--overhead-limit", type=float, default=None,
+                    help="max traced-vs-untraced wall overhead "
+                    "(default 0.05, smoke 0.35)")
     ap.add_argument("--smoke", action="store_true",
                     help="small fleet + workload for CI")
     args = ap.parse_args(argv)
@@ -59,6 +75,8 @@ def main(argv=None):
     n_engines = args.engines or (25 if args.smoke else 1000)
     floor = args.floor if args.floor is not None else (
         SMOKE_RPS_FLOOR if args.smoke else RPS_FLOOR)
+    overhead_limit = args.overhead_limit if args.overhead_limit is not None \
+        else (SMOKE_OVERHEAD_LIMIT if args.smoke else OVERHEAD_LIMIT)
     # the smoke run compresses 3 days into 3 virtual hours so the diurnal
     # swing still exercises both the loaded and the idle regime
     period_s = 3600.0 if args.smoke else 86400.0
@@ -72,34 +90,51 @@ def main(argv=None):
     n_decode = n_engines - n_prefill
     capacity = 2048
 
-    def eng(i, slots):
-        # step_history bounds the per-engine step-time log (the one
-        # per-step accumulator) so fleet memory stays flat over 1e6 steps
-        return SimEngine(i, perf, slots=slots, capacity=capacity,
-                         step_history=64)
+    def build():
+        """Fresh fleet + cluster + workload + metrics (deterministic: the
+        traced episode replays the untraced one exactly)."""
+        def eng(i, slots):
+            # step_history bounds the per-engine step-time log (the one
+            # per-step accumulator) so fleet memory stays flat over 1e6 steps
+            return SimEngine(i, perf, slots=slots, capacity=capacity,
+                             step_history=64)
 
-    pools = {"prefill": [eng(i, 4) for i in range(n_prefill)],
-             "decode": [eng(10_000 + i, 8) for i in range(n_decode)]}
-    rate_matcher = ElasticPolicy(tick_every_s=period_s / 24.0)
-    cluster = Cluster(pools, sanitize=False, rate_matcher=rate_matcher)
+        pools = {"prefill": [eng(i, 4) for i in range(n_prefill)],
+                 "decode": [eng(10_000 + i, 8) for i in range(n_decode)]}
+        workload = OpenLoopWorkload(
+            Diurnal(base_rps, amplitude=0.5, period=period_s),
+            LognormalShape(128, 16, 0.6, 0.5),
+            vocab=32_000, seed=0, max_requests=n_requests,
+            horizon_s=horizon_s)
+        metrics = StreamingMetrics(window_s=period_s / 24.0,
+                                   occupancy_every_s=period_s / 288.0)
+        return pools, workload, metrics
 
-    # one vectorized roofline pass per (batch, kv) grid — serving then
-    # never calls the scalar roofline on the decode path
-    primed = prime_decode(pools["prefill"] + pools["decode"], capacity)
+    def run(recorder=None):
+        pools, workload, metrics = build()
+        rate_matcher = ElasticPolicy(tick_every_s=period_s / 24.0)
+        cluster = Cluster(pools, sanitize=False, rate_matcher=rate_matcher,
+                          recorder=recorder)
+        # one vectorized roofline pass per (batch, kv) grid — serving then
+        # never calls the scalar roofline on the decode path
+        primed = prime_decode(pools["prefill"] + pools["decode"], capacity)
+        t0 = time.perf_counter()
+        m = cluster.serve(workload, metrics=metrics)
+        wall = time.perf_counter() - t0
+        return m, wall, primed, rate_matcher
 
-    workload = OpenLoopWorkload(
-        Diurnal(base_rps, amplitude=0.5, period=period_s),
-        LognormalShape(128, 16, 0.6, 0.5),
-        vocab=32_000, seed=0, max_requests=n_requests, horizon_s=horizon_s)
-
-    metrics = StreamingMetrics(window_s=period_s / 24.0,
-                               occupancy_every_s=period_s / 288.0)
-    t0 = time.perf_counter()
-    m = cluster.serve(workload, metrics=metrics)
-    wall = time.perf_counter() - t0
-
+    # untraced run first: it is the one held to the rps/RSS floors
+    m, wall, primed, rate_matcher = run()
     peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
     rps = m["completed"] / wall
+
+    # traced replay: cap events below the fleet total so the overhead gate
+    # also covers the overflow (count, don't grow) path at full scale
+    recorder = TraceRecorder(max_events=200_000,
+                             counter_every_s=period_s / 288.0)
+    m_traced, wall_traced, _, _ = run(recorder)
+    overhead = wall_traced / wall - 1.0
+    schedule_identical = (m_traced == m)
 
     report = {
         "bench": "fleet_scale",
@@ -119,11 +154,22 @@ def main(argv=None):
         "floor_rps": floor,
         "rss_ceiling_mb": args.rss_ceiling_mb,
         "primed_grid_points": primed,
+        "traced": {
+            "wall_s": round(wall_traced, 3),
+            "overhead": round(overhead, 4),
+            "overhead_limit": overhead_limit,
+            "events": len(recorder.events),
+            "dropped": recorder.dropped,
+            "schedule_identical": schedule_identical,
+        },
         "virtual": {
             "p50_ftl_s": round(m["p50_ftl_s"], 6),
             "p99_ftl_s": round(m["p99_ftl_s"], 6),
             "p50_ttl_s": round(m["p50_ttl_s"], 6),
             "p99_ttl_s": round(m["p99_ttl_s"], 6),
+            "p99_queue_wait_s": round(m["p99_queue_wait_s"], 6),
+            "p99_transfer_s": round(m["p99_transfer_s"], 6),
+            "p99_decode_stall_s": round(m["p99_decode_stall_s"], 6),
             "tokens_per_s": round(m["tokens_per_s"], 3),
             "peak_rps": round(m["peak_rps"], 3),
             "occupancy_decode": round(m.get("occupancy_decode", 0.0), 4),
@@ -143,10 +189,17 @@ def main(argv=None):
     assert peak_rss_mb <= args.rss_ceiling_mb, (
         f"peak RSS {peak_rss_mb:.0f} MB above the "
         f"{args.rss_ceiling_mb:.0f} MB ceiling")
+    assert schedule_identical, (
+        "traced episode produced different metrics than untraced — the "
+        "recorder perturbed the schedule")
+    assert overhead <= overhead_limit, (
+        f"tracing overhead {overhead:.1%} above the "
+        f"{overhead_limit:.0%} limit")
     print(f"# OK: {m['completed']:,} requests on {n_engines} engines in "
           f"{wall:.1f}s -> {rps:,.0f} req/s (floor {floor:,.0f}), "
           f"peak RSS {peak_rss_mb:.0f} MB (ceiling "
-          f"{args.rss_ceiling_mb:.0f})")
+          f"{args.rss_ceiling_mb:.0f}), tracing overhead "
+          f"{overhead:+.1%} (limit {overhead_limit:.0%})")
     return report
 
 

@@ -133,7 +133,7 @@ except FileNotFoundError:
     sys.exit("BENCH_fleet.json missing: fleet benchmark did not emit it")
 required = {"bench", "smoke", "model", "fleet", "workload", "wall_s", "rps",
             "completed", "arrived", "peak_rss_mb", "floor_rps",
-            "rss_ceiling_mb", "primed_grid_points", "virtual"}
+            "rss_ceiling_mb", "primed_grid_points", "traced", "virtual"}
 missing = required - set(d)
 assert not missing, f"BENCH_fleet.json missing keys: {sorted(missing)}"
 assert d["completed"] >= d["workload"]["requests"] > 0, d
@@ -141,10 +141,42 @@ assert d["rps"] >= d["floor_rps"] > 0, \
     f"fleet rate {d['rps']} below floor {d['floor_rps']}"
 assert 0 < d["peak_rss_mb"] <= d["rss_ceiling_mb"], d
 assert d["primed_grid_points"] > 0, "decode grid was not primed"
+t = d["traced"]
+assert t["schedule_identical"], \
+    "traced fleet episode diverged from untraced (recorder perturbed it)"
+assert t["overhead"] <= t["overhead_limit"], \
+    f"tracing overhead {t['overhead']:.1%} above {t['overhead_limit']:.0%}"
+assert t["events"] > 0, "traced episode recorded no events"
 print("BENCH_fleet.json OK: %s engines -> %.0f req/s (floor %.0f), "
-      "peak RSS %.0f MB (ceiling %.0f)"
+      "peak RSS %.0f MB (ceiling %.0f), tracing overhead %+.1f%% "
+      "(limit %.0f%%)"
       % (d["fleet"]["engines"], d["rps"], d["floor_rps"],
-         d["peak_rss_mb"], d["rss_ceiling_mb"]))
+         d["peak_rss_mb"], d["rss_ceiling_mb"], 100 * t["overhead"],
+         100 * t["overhead_limit"]))
+PY
+
+echo "== observability: span trace export + attribution (smoke) =="
+python -m repro.launch.serve --backend sim --workload burst --requests 16 \
+    --trace-out /tmp/trace_smoke.json > /tmp/serve_obs.json
+python - <<'PY'
+import json, sys
+sys.path.insert(0, "src")
+from repro.serving.obs import validate_trace
+trace = json.load(open("/tmp/trace_smoke.json"))
+counts = validate_trace(trace)
+assert counts["b"] == counts["e"] > 0, counts
+assert counts["X"] > 0 and counts["M"] > 0, counts
+phases = {e["name"] for e in trace["traceEvents"] if e["ph"] == "b"}
+assert phases <= {"queue", "prefill", "transfer", "decode"}, phases
+m = trace["otherData"]["metrics"]
+for k in ("p50_queue_wait_s", "p99_queue_wait_s", "p50_prefill_s",
+          "p99_prefill_s", "p50_transfer_s", "p99_transfer_s",
+          "p50_decode_stall_s", "p99_decode_stall_s"):
+    assert k in m, f"attribution column {k} missing from trace metrics"
+print("trace schema OK: %d events (%d slices, %d async, %d counters), "
+      "attribution columns present"
+      % (counts["total"], counts["X"], counts["b"] + counts["e"],
+         counts["C"]))
 PY
 
 echo "== simulator-in-the-loop sweep (smoke) =="

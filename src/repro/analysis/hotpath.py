@@ -30,6 +30,14 @@ never silently accreted.
 Aliased iterables (``pre = cluster.prefill_pool; for e in pre``) are
 deliberately not tracked: the pass under-approximates scans rather than
 guessing, and the budget covers the direct-access idiom the loop uses.
+
+Tracing call sites are held to the same budget: the loop reaches
+``serving.tracing`` only through the ``rec = self.recorder; if rec is
+not None`` guard, and a disabled recorder is collapsed to ``None`` at
+``Cluster`` construction — so the off path contributes zero findings.
+The fleet walks *inside* ``TraceRecorder`` (episode metadata capture,
+rate-limited counter sampling) are enabled-path only and carry annotated
+``why`` entries in ``baseline.json``.
 """
 from __future__ import annotations
 

@@ -23,9 +23,11 @@ run the same workload on two backends with sanitizers attached and call
 per-request streams.
 
 A violation raises ``SanitizerError`` carrying the tail of the recorded
-transition trace, so the failing schedule is inspectable. The sanitizer
-is duck-typed against the cluster (no serving import): it stays
-dependency-free and usable from any layer.
+transition trace, so the failing schedule is inspectable — or, when the
+cluster also carries a ``serving.tracing.TraceRecorder``, the recorder's
+flight ring (full span context, dumped via ``self.flight``) replaces the
+ad-hoc tail. The sanitizer is duck-typed against the cluster (no serving
+import): it stays dependency-free and usable from any layer.
 """
 from __future__ import annotations
 
@@ -55,6 +57,11 @@ class ClusterSanitizer:
         self.events = 0
         self._hashes: Dict[int, str] = {}
         self._counts: Dict[int, int] = {}
+        # optional serving.tracing.FlightRecorder: when a Cluster carries
+        # both a sanitizer and a TraceRecorder it wires the recorder's
+        # flight ring here, and _fail() dumps + reports span context
+        # instead of the sanitizer's own transition tail
+        self.flight = None
         self._reset_episode()
 
     def _reset_episode(self) -> None:
@@ -71,6 +78,11 @@ class ClusterSanitizer:
     # -- failure plumbing ---------------------------------------------------
 
     def _fail(self, msg: str) -> None:
+        if self.flight is not None:
+            self.flight.dump("sanitizer_error", self._now, msg)
+            tail = self.flight.format()
+            raise SanitizerError(
+                f"{msg}\nflight recorder (oldest first):\n{tail}")
         tail = "\n".join(f"  {t}" for t in list(self.trace)[-12:])
         raise SanitizerError(
             f"{msg}\nlast transitions (oldest first):\n{tail}")

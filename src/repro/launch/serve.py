@@ -123,6 +123,10 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=20.0)
     ap.add_argument("--piggyback-chunk", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="attach a span TraceRecorder and write a Chrome/"
+                    "Perfetto trace (one track per engine, async slices "
+                    "per request, counter tracks) to this path")
     args = ap.parse_args(argv)
     if args.calibrate and args.backend != "sim":
         ap.error("--calibrate fits the sim roofline scale; pass "
@@ -178,6 +182,11 @@ def main(argv=None):
                            chip=get_chip(chip_name),
                            calibration=cal_by_chip.get(chip_name))
 
+    recorder = None
+    if args.trace_out:
+        from repro.serving.tracing import TraceRecorder
+        recorder = TraceRecorder()
+
     scheduler = SCHEDULERS[args.scheduler](chunk)
     sched_name = args.scheduler
     rate_matcher = {
@@ -194,7 +203,8 @@ def main(argv=None):
                          for i in range(args.prefill_engines)],
              "decode": [mk(100 + i, args.decode_chip)
                         for i in range(args.decode_engines)]},
-            scheduler=scheduler, router=router, rate_matcher=rate_matcher)
+            scheduler=scheduler, router=router, rate_matcher=rate_matcher,
+            recorder=recorder)
         metrics = cluster.serve(work)
         extra = {"transfers": cluster.stats.transfers,
                  "transferred_MB": cluster.stats.transferred_bytes / 2**20,
@@ -224,10 +234,19 @@ def main(argv=None):
             {"mixed": [mk(i, args.prefill_chip)
                        for i in range(args.prefill_engines
                                       + args.decode_engines)]},
-            scheduler=scheduler, router=router, rate_matcher=None)
+            scheduler=scheduler, router=router, rate_matcher=None,
+            recorder=recorder)
         metrics = cluster.serve(work)
         extra = {"transfers": cluster.stats.transfers,
                  "hardware": cluster.pool_hardware()}
+
+    if recorder is not None:
+        from repro.serving.obs import export_perfetto
+        counts = export_perfetto(recorder, args.trace_out, metrics=metrics)
+        print(f"# trace: {args.trace_out} ({counts['total']} events, "
+              f"{counts['X']} slices, {counts['b']} request phases, "
+              f"{len(recorder.dumps)} flight dumps) — load in "
+              "ui.perfetto.dev or chrome://tracing", file=sys.stderr)
 
     print(json.dumps({"arch": cfg.name, "mode": args.mode,
                       "backend": args.backend,

@@ -290,7 +290,7 @@ class Cluster:
     def __init__(self, pools: Dict[str, List[Engine]], *,
                  scheduler=None, router=None, rate_matcher=None,
                  sanitize: Optional[bool] = None,
-                 legacy_loop: bool = False):
+                 recorder=None):
         from repro.serving.policies import FCFSScheduler, RoundRobinRouter
         assert pools and all(r in (PREFILL, DECODE, MIXED) for r in pools), \
             f"roles must be {PREFILL}/{DECODE}/{MIXED}: {list(pools)}"
@@ -304,6 +304,18 @@ class Cluster:
             self.sanitizer: Optional[ClusterSanitizer] = ClusterSanitizer()
         else:
             self.sanitizer = None
+        # span/event tracing (serving/tracing.py). A disabled recorder
+        # (NullRecorder) collapses to None here so the event loop's only
+        # off-path cost is the same ``is not None`` guard the sanitizer
+        # pays — zero allocations, zero calls (the hotpath budget's
+        # disabled-is-free contract).
+        if recorder is not None and not getattr(recorder, "enabled", True):
+            recorder = None
+        self.recorder = recorder
+        if recorder is not None and self.sanitizer is not None:
+            # SanitizerError messages append the flight-recorder ring
+            # instead of the sanitizer's ad-hoc transition tail
+            self.sanitizer.flight = recorder.flight
         self._views: Dict[str, List[Engine]] = {}
         self.pools: Dict[str, List[Engine]] = {
             role: ObservedList(engines, self._invalidate_views)
@@ -322,10 +334,6 @@ class Cluster:
         # ready_requests() memo: ((now, queue version), snapshot)
         self._ready_cache: Optional[Tuple[Tuple[float, int],
                                           List[Request]]] = None
-        # event-heap loop state. legacy_loop=True restores the pre-heap
-        # round scan (serving/legacy_loop.py) for differential testing;
-        # it is frozen and scheduled for removal next PR.
-        self.legacy_loop = legacy_loop
         self.events = EventQueue()
         # engines holding at least one resident request (id(engine) ->
         # engine): the decode phase walks this instead of the fleet, so
@@ -454,10 +462,13 @@ class Cluster:
         """Re-queue (at the front) everything in flight on an engine and
         release its slots — the one requeue path for failures, migrations,
         and straggler drains."""
+        rec = self.recorder
         for slot, req in list(eng.slot_req.items()):
             req.reset_for_requeue()
             if self.sanitizer is not None:
                 self.sanitizer.on_requeue(req)
+            if rec is not None:
+                rec.on_requeue(req, self.now)
             self.queue.insert(0, req)
             self.stats.requeued += 1
             eng.evict(slot)
@@ -469,6 +480,12 @@ class Cluster:
         self.requeue_inflight(eng)
         src.remove(eng)
         dst.append(eng)
+        rec = self.recorder
+        if rec is not None:
+            for role, pool in self.pools.items():
+                if pool is dst:
+                    rec.on_migrate(eng, role, self.now)
+                    break
 
     def retire(self, eng: Engine):
         """Drop an engine from the fleet entirely (the rate-matcher
@@ -485,6 +502,8 @@ class Cluster:
         self.stats.engine_failures += 1
         if self.sanitizer is not None:
             self.sanitizer.on_engine_failure(eng)
+        if self.recorder is not None:
+            self.recorder.on_engine_failure(eng, self.now)
         self._invalidate_views()    # the engine may stay pooled, unhealthy
         self.requeue_inflight(eng)
         if self.rate_matcher is not None:
@@ -550,6 +569,9 @@ class Cluster:
         san = self.sanitizer
         if san is not None:
             san.on_episode_begin(self)
+        rec = self.recorder
+        if rec is not None:
+            rec.on_episode_begin(self)
         # streaming episodes drop finished requests; the sanitizer's
         # episode-end conservation check still needs the full list
         keep_served = metrics is None or san is not None
@@ -562,7 +584,7 @@ class Cluster:
         # tick(cluster) at that virtual-time cadence via the event heap
         # (event loop only — the frozen legacy loop never drains events)
         tick_every = getattr(self.rate_matcher, "tick_every_s", None)
-        if tick_every and not self.legacy_loop:
+        if tick_every:
             self.events.push(self.now + tick_every, EV_REBALANCE)
         try:
             while True:
@@ -579,9 +601,16 @@ class Cluster:
                         metrics.on_arrival(r, self.now)
                     if san is not None:
                         san.on_arrival(r, self.now)
+                    if rec is not None:
+                        # stamp the workload's declared arrival, not the
+                        # poll instant: the queue phase must start where
+                        # queue_wait_s starts, so phases tile to e2e
+                        rec.on_arrival(r, r.arrival_t)
                 progressed = self._step()
                 if metrics is not None:
                     metrics.on_round(self)
+                if rec is not None:
+                    rec.on_round(self)
                 if self.now > max_wall_s:
                     break
                 if self.rate_matcher is not None:
@@ -605,15 +634,12 @@ class Cluster:
         return sla_metrics(served)
 
     def _step(self) -> bool:
-        """One scheduling round. Returns False when everything is drained.
-
-        Dispatches to the event-heap round (the default) or, under
-        ``legacy_loop=True``, to the frozen pre-heap full-fleet scan
-        (``serving/legacy_loop.py``) kept one PR for differential
-        certification — both produce byte-identical schedules."""
-        if self.legacy_loop:
-            from repro.serving.legacy_loop import legacy_step
-            return legacy_step(self)
+        """One scheduling round (the event-heap round). Returns False when
+        everything is drained. The pre-heap full-fleet scan this replaced
+        (``serving/legacy_loop.py``) soaked one PR behind
+        ``legacy_loop=True`` with byte-identical schedules and is gone;
+        schedule identity is now certified by trace parity
+        (``tests/test_fleet_scale.py``)."""
         return self._step_event()
 
     def _fire_due_events(self) -> None:
@@ -631,6 +657,10 @@ class Cluster:
                 tick = getattr(self.rate_matcher, "tick", None)
                 if tick is not None:
                     tick(self)
+                    if self.recorder is not None:
+                        self.recorder.on_rebalance(
+                            self.now,
+                            getattr(self.rate_matcher, "last_signal", None))
                 every = getattr(self.rate_matcher, "tick_every_s", None)
                 if every:
                     nxt = t + every
@@ -647,6 +677,7 @@ class Cluster:
         by the memoized fleet rank so the schedule is byte-identical."""
         progressed = False
         self._fire_due_events()
+        rec = self.recorder
 
         # 1) admission + prefill: the scheduler picks per prefill-capable
         #    engine; mixed engines also need a local decode slot to admit.
@@ -690,6 +721,9 @@ class Cluster:
             req.output.append(tok)
             if self.sanitizer is not None:
                 self.sanitizer.on_prefill(req, eng, self.now)
+            if rec is not None:
+                rec.on_admit(req, eng, req.prefill_start_t)
+                rec.on_prefill(req, eng, self.now - dt, self.now)
             self.pending_insert.append((req, tok, cache, eng))
             progressed = True
             ready = self.first_ready() is not None      # queue + clock moved
@@ -711,12 +745,18 @@ class Cluster:
             if self.sanitizer is not None:
                 self.sanitizer.on_insert(req, target, self.now)
             req._next_tok = tok
+            req.insert_t = self.now     # unconditional: attribution columns
+            #                             are identical with tracing on/off
+            nb = 0
             if target is not src:
                 self.stats.transfers += 1
                 # one kv_bytes() per transferring request (an entry leaves
                 # pending on insert); SimCache answers from its nbytes
                 # field, the real backend walks its pytree once
-                self.stats.transferred_bytes += kv_bytes(cache)
+                nb = kv_bytes(cache)
+                self.stats.transferred_bytes += nb
+            if rec is not None:
+                rec.on_insert(req, target, src, self.now, nb)
             progressed = True
         self.pending_insert = still
 
@@ -757,9 +797,13 @@ class Cluster:
         except EngineFailure:
             self._fail_engine(eng)
             return True
-        self.now += eng.step_times[-1]
-        self.stats.decode_busy_s += eng.step_times[-1]
+        dt = eng.step_times[-1]
+        self.now += dt
+        self.stats.decode_busy_s += dt
         san = self.sanitizer
+        rec = self.recorder
+        if rec is not None:
+            rec.on_decode_step(eng, self.now - dt, self.now, len(nxt))
         for slot, tok in nxt.items():
             req = eng.slot_req[slot]
             if san is not None:
@@ -767,11 +811,15 @@ class Cluster:
             req.output.append(tok)
             req.token_times.append(self.now)
             req._next_tok = tok
+            req.decode_active_s += dt   # unconditional: stall attribution
+            #                             is identical with tracing on/off
             if req.done:
                 req.done_t = self.now
                 eng.evict(slot)
                 if san is not None:
                     san.on_complete(req, self.now)
+                if rec is not None:
+                    rec.on_complete(req, self.now)
                 if self._metrics is not None:
                     self._metrics.on_complete(req, self.now)
                 if self._workload is not None:

@@ -56,6 +56,9 @@ class ElasticRateMatcher:
         self.cfg = cfg
         self._round = 0
         self.moves: List[str] = []
+        # (backlog, decode occupancy) from the latest rebalance pass — the
+        # signal the trace recorder attaches to "rebalance" span events
+        self.last_signal = None
 
     # -- failure handling -------------------------------------------------
 
@@ -91,6 +94,7 @@ class ElasticRateMatcher:
         pre = [e for e in orch.prefill_pool if e.healthy]
         occupancy = (sum(e.active for e in dec)
                      / max(sum(e.slots for e in dec), 1))
+        self.last_signal = (backlog, occupancy)
         if (backlog >= self.cfg.queue_high and occupancy < 0.5):
             self._move(orch, orch.decode_pool, orch.prefill_pool,
                        f"backlog={backlog}")

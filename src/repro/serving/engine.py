@@ -43,6 +43,8 @@ from repro.serving.common import EngineFailure, PrefixCache  # noqa: F401
 class Engine:
     """One model instance. Thread-unsafe by design (driven by Orchestrator)."""
 
+    backend = "real"
+
     def __init__(self, engine_id: int, cfg: ModelConfig, params,
                  *, slots: int = 8, capacity: int = 256,
                  chunk_size: int = 0, chip: Optional[ChipConfig] = None,
@@ -94,6 +96,14 @@ class Engine:
         """Serving capacity in reference-chip (v5e) equivalents — what the
         elastic rate matcher sums instead of counting engine heads."""
         return 1.0 / self.speed_factor
+
+    def describe(self) -> Dict[str, Any]:
+        """Static metadata for trace track labels (serving.tracing)."""
+        return {"engine_id": self.engine_id, "backend": self.backend,
+                "hardware": self.hardware, "slots": self.slots,
+                "capacity": self.capacity,
+                "speed_factor": self.speed_factor,
+                "capacity_weight": self.capacity_weight}
 
     def _tick(self, t0: float):
         dt = ((time.perf_counter() - t0) * self.speed_factor

@@ -26,6 +26,7 @@ numpy-only (no jax), like the rest of the simulation path.
 """
 from __future__ import annotations
 
+import json
 import math
 from typing import Dict, List, Optional
 
@@ -166,6 +167,12 @@ class StreamingMetrics:
                  occupancy_every_s: float = 1.0, alpha: float = 0.005):
         self._ftl = QuantileSketch(alpha)
         self._ttl = QuantileSketch(alpha)
+        # per-phase latency-attribution sketches (Request.queue_wait_s /
+        # prefill_s / transfer_s / decode_stall_s)
+        self._queue = QuantileSketch(alpha)
+        self._pre = QuantileSketch(alpha)
+        self._xfer = QuantileSketch(alpha)
+        self._stall = QuantileSketch(alpha)
         self.arrived = 0
         self.completed = 0
         self._wait_sum = 0.0
@@ -197,6 +204,16 @@ class StreamingMetrics:
         if w is not None:
             self._wait_sum += w
             self._wait_n += 1
+            self._queue.add(w)
+        pre = req.prefill_s
+        if pre is not None:
+            self._pre.add(pre)
+        xfer = req.transfer_s
+        if xfer is not None:
+            self._xfer.add(xfer)
+        stall = req.decode_stall_s
+        if stall is not None:
+            self._stall.add(stall)
         self._sla_met += bool(req.sla_met)
         ntok = len(req.output)
         self._tokens += ntok
@@ -215,7 +232,11 @@ class StreamingMetrics:
         if now < self._occ_next:
             return
         self._occ_next = now + self._occ_every
-        for name, pool in cluster.pools.items():
+        # sorted role order: _occ insertion order (and so the
+        # occupancy_<pool> column order in result()) is stable no matter
+        # which pool a cluster happened to mutate first
+        for name in sorted(cluster.pools):
+            pool = cluster.pools[name]
             used = 0
             cap = 0
             for e in pool:
@@ -240,6 +261,14 @@ class StreamingMetrics:
             "p99_ttl_s": self._ttl.quantile(99),
             "queue_wait_s": (self._wait_sum / self._wait_n
                              if self._wait_n else 0.0),
+            "p50_queue_wait_s": self._queue.quantile(50),
+            "p99_queue_wait_s": self._queue.quantile(99),
+            "p50_prefill_s": self._pre.quantile(50),
+            "p99_prefill_s": self._pre.quantile(99),
+            "p50_transfer_s": self._xfer.quantile(50),
+            "p99_transfer_s": self._xfer.quantile(99),
+            "p50_decode_stall_s": self._stall.quantile(50),
+            "p99_decode_stall_s": self._stall.quantile(99),
             "sla_attainment": (self._sla_met / self.completed
                                if self.completed else 0.0),
             "tokens_per_s": self._tokens / span,
@@ -255,3 +284,12 @@ class StreamingMetrics:
         for name, (frac, n) in sorted(self._occ.items()):
             out[f"occupancy_{name}"] = frac / n if n else 0.0
         return out
+
+    def result_json(self) -> str:
+        """``result()`` as byte-stable JSON (``sort_keys``, non-finite
+        quantiles of empty sketches rendered as null) — the form the trace
+        exporter embeds and CI diffs."""
+        clean = {k: (v if isinstance(v, (int,)) or math.isfinite(v)
+                     else None)
+                 for k, v in self.result().items()}
+        return json.dumps(clean, sort_keys=True)

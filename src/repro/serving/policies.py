@@ -268,6 +268,12 @@ class ElasticPolicy:
     def moves(self) -> List[str]:
         return self.elastic.moves
 
+    @property
+    def last_signal(self):
+        """Latest (backlog, decode occupancy) rebalance signal — attached
+        to "rebalance" span events by the trace recorder."""
+        return self.elastic.last_signal
+
     def step(self, cluster):
         if self.tick_every_s is None:
             self.elastic.maybe_rebalance(cluster)

@@ -333,6 +333,14 @@ class SimEngine:
     def capacity_weight(self) -> float:
         return 1.0 / self.speed_factor
 
+    def describe(self) -> Dict[str, Any]:
+        """Static metadata for trace track labels (serving.tracing)."""
+        return {"engine_id": self.engine_id, "backend": self.backend,
+                "hardware": self.hardware, "slots": self.slots,
+                "capacity": self.capacity,
+                "speed_factor": self.speed_factor,
+                "capacity_weight": self.capacity_weight}
+
     def _check(self):
         if not self.healthy:
             raise EngineFailure(f"engine {self.engine_id} is down")

@@ -135,6 +135,16 @@ def simulate_cell(cell: SweepCell, *, slots: int = SIM_SLOTS
         "p50_ttl_s": metrics["p50_ttl_s"],
         "p99_ttl_s": metrics["p99_ttl_s"],
         "queue_wait_s": metrics["queue_wait_s"],
+        # phase-level latency attribution (serving.tracing): where each
+        # request's end-to-end latency went, as quantile columns
+        "p50_queue_wait_s": metrics["p50_queue_wait_s"],
+        "p99_queue_wait_s": metrics["p99_queue_wait_s"],
+        "p50_prefill_s": metrics["p50_prefill_s"],
+        "p99_prefill_s": metrics["p99_prefill_s"],
+        "p50_transfer_s": metrics["p50_transfer_s"],
+        "p99_transfer_s": metrics["p99_transfer_s"],
+        "p50_decode_stall_s": metrics["p50_decode_stall_s"],
+        "p99_decode_stall_s": metrics["p99_decode_stall_s"],
         "tokens_per_s": metrics["tokens_per_s"],
         "tps_per_user": metrics["tps_per_user"],
         "tput_per_chip": metrics["tokens_per_s"] / n_chips,

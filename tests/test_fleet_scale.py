@@ -1,16 +1,23 @@
-"""Differential certification of the event-heap loop (ISSUE 8 tentpole).
+"""Differential certification of the event-heap loop via trace parity.
 
-The heap loop (``Cluster._step_event``) replaced the legacy full-fleet
-scan; the legacy body is kept for one PR behind
-``Cluster(legacy_loop=True)`` precisely so this suite can replay identical
-workloads through both and assert byte-identical results:
+The legacy full-fleet scan this suite used to diff against is gone (it
+soaked one PR behind ``Cluster(legacy_loop=True)`` with byte-identical
+schedules); the differential axis is now **span-trace parity**: replay the
+same workload through two independently built clusters with
+``TraceRecorder`` attached and assert the span streams are byte-identical
+(``span_digest(content=True)``) — a strictly finer check than metrics
+equality, since the stream covers every lifecycle transition with its
+virtual timestamp.
 
-  1. schedule parity on every checked-in trace (``tests/data/traces/``)
-     under several policy combinations: sha256 of the per-request token
-     streams, sanitizer stream parity (content included), transition
-     traces, metrics, and transfer counts must all match;
-  2. the same parity under ``REPRO_SANITIZE=1`` (env-gated sanitizer) and
-     under mid-run engine failure + requeue;
+  1. trace parity on every checked-in trace (``tests/data/traces/``)
+     under several policy combinations: span digests, sha256 of the
+     per-request token streams, sanitizer stream parity (content
+     included), metrics, and transfer counts must all match;
+  2. recorder-off identity — serving traced vs untraced produces
+     byte-identical token streams, metrics, and sanitizer transition
+     traces (the recorder observes, never perturbs) — plus the same
+     parity under ``REPRO_SANITIZE=1`` and under mid-run engine failure
+     + requeue;
   3. ``EventQueue`` ordering properties: deterministic tie-break by
      sequence number, total and stable pop order under interleaved
      push/pop (verified against a reference heap; hypothesis-driven when
@@ -23,7 +30,7 @@ workloads through both and assert byte-identical results:
      schedule.
 
 Everything runs on ``SimEngine`` (virtual clock): deterministic and fast
-enough to replay every trace x combo x loop in seconds.
+enough to replay every trace x combo x run in seconds.
 """
 import hashlib
 import heapq
@@ -40,6 +47,7 @@ from repro.serving.metrics import StreamingMetrics
 from repro.serving.policies import (ElasticPolicy, LeastLoadedRouter,
                                     PriorityScheduler)
 from repro.serving.simengine import SimEngine, decode_grid, prime_decode
+from repro.serving.tracing import TraceRecorder
 from repro.workloads import (FixedShape, OpenLoopWorkload, Poisson,
                              TraceReplay)
 
@@ -56,8 +64,8 @@ VOCAB = 97
 PERF = PAPER_MODELS["llama-3.1-8b"]
 
 # fresh policy objects per cluster: routers/schedulers carry rotation
-# state across episodes, so sharing one instance between the legacy and
-# heap runs would hand the second run a pre-rotated policy
+# state across episodes, so sharing one instance between the two parity
+# runs would hand the second run a pre-rotated policy
 COMBOS = {
     "default": lambda: {},
     "priority+leastloaded": lambda: {"scheduler": PriorityScheduler(),
@@ -74,11 +82,12 @@ def _fleet(cap):
                        SimEngine(12, PERF, slots=4, capacity=cap)]}
 
 
-def _serve_trace(name, legacy, combo="default", sanitize=True,
+def _serve_trace(name, traced=True, combo="default", sanitize=True,
                  fail_engine=False):
     replay = TraceReplay(TRACE_DIR / f"{name}.jsonl", vocab=VOCAB)
     cap = replay.max_context() + 8
-    cl = Cluster(_fleet(cap), sanitize=sanitize, legacy_loop=legacy,
+    recorder = TraceRecorder() if traced else None
+    cl = Cluster(_fleet(cap), sanitize=sanitize, recorder=recorder,
                  **COMBOS[combo]())
     if fail_engine:     # one deterministic mid-run failure + requeue
         eng = cl.pools["decode"][0]
@@ -102,11 +111,19 @@ def _stream_sha(replay):
     return h.hexdigest()
 
 
-def _assert_identical(name, combo="default", sanitize=True,
-                      fail_engine=False):
+def _assert_trace_parity(name, combo="default", sanitize=True,
+                         fail_engine=False):
+    """Two independent traced runs of the same workload must produce
+    byte-identical span streams (and everything downstream of them)."""
     ca, ma, ra = _serve_trace(name, True, combo, sanitize, fail_engine)
-    cb, mb, rb = _serve_trace(name, False, combo, sanitize, fail_engine)
+    cb, mb, rb = _serve_trace(name, True, combo, sanitize, fail_engine)
     assert ma["completed"] == len(ra.requests) > 0    # parity is not vacuous
+    assert ca.recorder.events                         # spans actually flowed
+    assert ca.recorder.span_digest(content=True) \
+        == cb.recorder.span_digest(content=True), \
+        f"{name}/{combo}: span streams diverged"
+    assert ca.recorder.span_digest(content=False) \
+        == cb.recorder.span_digest(content=False)
     assert _stream_sha(ra) == _stream_sha(rb), \
         f"{name}/{combo}: token streams diverged"
     assert ma == mb, f"{name}/{combo}: metrics diverged"
@@ -118,29 +135,60 @@ def _assert_identical(name, combo="default", sanitize=True,
             f"{name}/{combo}: transition traces diverged"
 
 
+def _assert_recorder_off_identity(name, combo="default", sanitize=True,
+                                  fail_engine=False):
+    """Tracing on vs off: token streams, metrics, and sanitizer traces
+    byte-identical — the recorder never perturbs the schedule."""
+    ca, ma, ra = _serve_trace(name, True, combo, sanitize, fail_engine)
+    cb, mb, rb = _serve_trace(name, False, combo, sanitize, fail_engine)
+    assert cb.recorder is None
+    assert ma["completed"] == len(ra.requests) > 0
+    assert _stream_sha(ra) == _stream_sha(rb), \
+        f"{name}/{combo}: tracing perturbed token streams"
+    assert ma == mb, f"{name}/{combo}: tracing perturbed metrics"
+    assert ca.stats.transfers == cb.stats.transfers
+    if cb.sanitizer is not None:
+        assert_stream_parity(ca.sanitizer, cb.sanitizer, content=True)
+        assert list(ca.sanitizer.trace) == list(cb.sanitizer.trace), \
+            f"{name}/{combo}: tracing perturbed transition traces"
+
+
 # ---------------------------------------------------------------------------
-# 1+2) schedule parity, legacy vs heap
+# 1+2) trace parity + recorder-off identity
 
 
 @pytest.mark.parametrize("combo", sorted(COMBOS))
 @pytest.mark.parametrize("name", TRACES)
-def test_legacy_vs_heap_byte_identical_on_trace(name, combo):
-    _assert_identical(name, combo)
+def test_trace_parity_byte_identical_on_trace(name, combo):
+    _assert_trace_parity(name, combo)
+
+
+@pytest.mark.parametrize("combo", sorted(COMBOS))
+@pytest.mark.parametrize("name", TRACES)
+def test_recorder_off_schedule_identity_on_trace(name, combo):
+    _assert_recorder_off_identity(name, combo)
 
 
 @pytest.mark.parametrize("name", TRACES)
-def test_legacy_vs_heap_identical_under_env_sanitizer(name, monkeypatch):
+def test_trace_parity_under_env_sanitizer(name, monkeypatch):
     monkeypatch.setenv("REPRO_SANITIZE", "1")
-    _assert_identical(name, sanitize=None)   # None -> env gate decides
-    # the env gate actually armed the sanitizer (guards the guard)
-    cl, _, _ = _serve_trace(name, False, sanitize=None)
+    _assert_trace_parity(name, sanitize=None)   # None -> env gate decides
+    # the env gate actually armed the sanitizer (guards the guard), and
+    # the cluster wired the recorder's flight ring into it
+    cl, _, _ = _serve_trace(name, True, sanitize=None)
     assert cl.sanitizer is not None
+    assert cl.sanitizer.flight is cl.recorder.flight
 
 
-def test_legacy_vs_heap_identical_under_engine_failure():
-    _assert_identical("burst", fail_engine=True)
+def test_trace_parity_under_engine_failure():
+    _assert_trace_parity("burst", fail_engine=True)
+    _assert_recorder_off_identity("burst", fail_engine=True)
     ca, _, _ = _serve_trace("burst", True, fail_engine=True)
     assert ca.stats.engine_failures == 1     # the injection actually fired
+    kinds = [ev[0] for ev in ca.recorder.events]
+    assert "engine_failure" in kinds and "requeue" in kinds
+    assert any(d["reason"] == "engine_failure"
+               for d in ca.recorder.dumps)
 
 
 # ---------------------------------------------------------------------------

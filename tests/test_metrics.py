@@ -156,12 +156,51 @@ def test_streaming_result_matches_batch_sla_metrics():
     for k in ("p50_ftl_s", "p99_ftl_s", "p50_ttl_s", "p99_ttl_s",
               "tps_per_user"):
         assert stream[k] == pytest.approx(batch[k], rel=0.011), k
+    # phase-attribution columns (serving.tracing consumers) ride along in
+    # both surfaces; abs floor: phases that are exactly zero land in the
+    # sketch's 1e-9 min bucket
+    for k in ("p50_queue_wait_s", "p99_queue_wait_s", "p50_prefill_s",
+              "p99_prefill_s", "p50_transfer_s", "p99_transfer_s",
+              "p50_decode_stall_s", "p99_decode_stall_s"):
+        assert stream[k] == pytest.approx(batch[k], rel=0.011,
+                                          abs=2e-9), k
     # fleet extras ride along without colliding with sla_metrics keys
     assert stream["arrived"] == stream["completed"] == 2_000
     assert stream["peak_rps"] >= stream["window_rps"] >= 0.0
     for pool in ("prefill", "decode"):
         assert 0.0 <= stream[f"occupancy_{pool}"] <= 1.0
     assert stream["occupancy_decode"] > 0.0
+
+
+def test_occupancy_keys_sorted_and_json_export_stable():
+    """``occupancy_<pool>`` keys come out in sorted pool order regardless
+    of pool-dict insertion order, and ``result_json`` is sort_keys-safe
+    (byte-identical across runs, non-finite values nulled) — the contract
+    the trace exporter's ``otherData`` leans on."""
+    import json
+
+    def run(pool_order):
+        pools = {}
+        for name in pool_order:
+            base = 0 if name == "prefill" else 10
+            pools[name] = [SimEngine(base + i, PERF, slots=4, capacity=64)
+                           for i in range(2)]
+        sm = StreamingMetrics()
+        Cluster(pools).serve(_workload(50), metrics=sm)
+        return sm
+
+    a = run(("prefill", "decode"))
+    b = run(("decode", "prefill"))
+    occ = lambda sm: [k for k in sm.result()         # noqa: E731
+                      if k.startswith("occupancy_")]
+    assert occ(a) == occ(b) == ["occupancy_decode", "occupancy_prefill"]
+    ja, jb = a.result_json(), b.result_json()
+    assert ja == jb                                 # byte-identical
+    assert ja == json.dumps(json.loads(ja), sort_keys=True)
+    parsed = json.loads(ja)
+    assert parsed["completed"] == 50
+    assert all(v is None or isinstance(v, (int, float))
+               for v in parsed.values())
 
 
 # ---------------------------------------------------------------------------

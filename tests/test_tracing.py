@@ -1,0 +1,404 @@
+"""Span tracing + observability consumers (serving.tracing / serving.obs).
+
+Covers:
+
+  - span lifecycle ordering per request (arrival -> admit -> prefill ->
+    insert -> complete, with requeue cycles re-entering the queue);
+  - latency attribution: per-request phase durations
+    (queue_wait/prefill/transfer/decode) telescope exactly to end-to-end
+    latency on every corpus trace, and the new p50/p99 phase columns show
+    up in both ``sla_metrics`` and ``StreamingMetrics``;
+  - zero-cost off state: ``NullRecorder`` collapses to ``None`` at
+    ``Cluster`` construction (recorder-off *schedule* identity is gated in
+    ``tests/test_fleet_scale.py``);
+  - Perfetto export: schema validation (``validate_trace``), phase-slice
+    tiling, byte-stable reruns of the serialized JSON;
+  - flight recorder: bounded ring, dump on injected engine failure, on
+    ``SanitizerError`` (replacing the sanitizer's ad-hoc trace tail), and
+    on SLO breach;
+  - cross-backend parity: the real and sim backends serving the same
+    workload emit the same per-request span structure (lifecycle kinds,
+    admission order) and both satisfy phase telescoping — the
+    observability leg of the backend-parity suite. (Whole-stream digests
+    are same-backend only: the *interleaving* of lifecycle events across
+    requests follows the virtual clock, which differs per backend.)
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizer import ClusterSanitizer, SanitizerError
+from repro.core.paper_models import LLAMA31_8B
+from repro.serving.cluster import Cluster
+from repro.serving.metrics import StreamingMetrics
+from repro.serving.obs import (export_flight, export_perfetto,
+                               request_phases, validate_trace)
+from repro.serving.policies import FCFSScheduler, RoundRobinRouter
+from repro.serving.request import Request, sla_metrics
+from repro.serving.simengine import SimEngine
+from repro.serving.tracing import (LIFECYCLE_KINDS, FlightRecorder,
+                                   NullRecorder, TraceRecorder,
+                                   describe_engine)
+from repro.workloads import (FixedShape, OpenLoopWorkload, Poisson, Recorder,
+                             TraceReplay)
+
+TRACE_DIR = pathlib.Path(__file__).parent / "data" / "traces"
+TRACES = ("burst", "diurnal", "sessions", "tiers", "fleet_diurnal")
+VOCAB = 97
+PERF = LLAMA31_8B
+
+PHASE_COLS = ("p50_queue_wait_s", "p99_queue_wait_s", "p50_prefill_s",
+              "p99_prefill_s", "p50_transfer_s", "p99_transfer_s",
+              "p50_decode_stall_s", "p99_decode_stall_s")
+
+
+def _fleet(cap=128):
+    return {"prefill": [SimEngine(0, PERF, slots=4, capacity=cap),
+                        SimEngine(1, PERF, slots=4, capacity=cap)],
+            "decode": [SimEngine(10, PERF, slots=4, capacity=cap),
+                       SimEngine(11, PERF, slots=4, capacity=cap)]}
+
+
+def _workload(n=24, seed=0, isl=24, osl=6, rate=50.0):
+    return OpenLoopWorkload(Poisson(rate), FixedShape(isl, osl), vocab=VOCAB,
+                            seed=seed, max_requests=n, horizon_s=1e9)
+
+
+def _requests(n=24, seed=0, isl=24, osl=6, rate=50.0):
+    """Materialized request list (drained generator) for ``Cluster.run``."""
+    return _workload(n, seed, isl, osl, rate).poll(float("inf"))
+
+
+def _serve(recorder=None, *, sanitize=False, reqs=None):
+    cl = Cluster(_fleet(), sanitize=sanitize, recorder=recorder)
+    reqs = reqs if reqs is not None else _requests()
+    m = cl.run(reqs, max_wall_s=1e6)
+    return cl, m, reqs
+
+
+# ---------------------------------------------------------------------------
+# lifecycle ordering + attribution
+
+
+def test_span_lifecycle_ordering_per_request():
+    rec = TraceRecorder()
+    cl, m, reqs = _serve(rec)
+    assert m["completed"] == len(reqs) > 0
+    for r in reqs:
+        span = rec.lifecycle(r.rid)
+        assert [ev[0] for ev in span] == ["arrival", "admit", "prefill",
+                                          "insert", "complete"], r.rid
+        ts = [ev[1] for ev in span]     # prefill's ev[1] is its start t0
+        # monotone up to one ulp: prefill's t0 is computed as now - dt
+        assert all(b >= a - 1e-12 for a, b in zip(ts, ts[1:]))
+
+
+@pytest.mark.parametrize("name", TRACES)
+def test_phase_durations_sum_to_e2e_on_corpus(name):
+    """The acceptance criterion: queue_wait + prefill + transfer + decode
+    telescope (within float rounding) to end-to-end latency for every
+    request of every corpus trace."""
+    replay = TraceReplay(TRACE_DIR / f"{name}.jsonl", vocab=VOCAB, seed=0)
+    cap = replay.max_context() + 8
+    cl = Cluster({"prefill": [SimEngine(i, PERF, slots=4, capacity=cap)
+                              for i in range(2)],
+                  "decode": [SimEngine(10 + i, PERF, slots=4, capacity=cap)
+                             for i in range(2)]},
+                 recorder=TraceRecorder())
+    m = cl.serve(replay, max_wall_s=1e6)
+    assert m["completed"] == len(replay.requests) > 0
+    for r in replay.requests:
+        parts = (r.queue_wait_s, r.prefill_s, r.transfer_s, r.decode_s)
+        assert all(p is not None and p >= -1e-12 for p in parts), r.rid
+        assert sum(parts) == pytest.approx(r.e2e_s, abs=1e-9), r.rid
+        stall = r.decode_stall_s
+        assert stall is not None and 0.0 <= stall <= r.decode_s + 1e-12
+    # the derived phase intervals tile [arrival_t, done_t] too
+    phases = request_phases(cl.recorder)
+    for r in replay.requests:
+        spans = phases[r.rid]
+        assert spans[0][1] == pytest.approx(r.arrival_t)
+        assert spans[-1][2] == pytest.approx(r.done_t)
+        total = sum(t1 - t0 for _, t0, t1 in spans)
+        assert total == pytest.approx(r.e2e_s, abs=1e-9)
+
+
+def test_attribution_columns_in_sla_and_streaming_metrics():
+    """Both metric surfaces expose the phase-attribution columns and agree
+    on them. (Tight sketch-vs-batch parity at scale lives in
+    ``tests/test_metrics.py``; 200 samples leave visible percentile
+    interpolation error, hence the loose rel here.)"""
+    sm = StreamingMetrics()
+    cl = Cluster(_fleet())
+    w = Recorder(_workload(200, rate=80.0))
+    m_stream = cl.serve(w, metrics=sm)
+    m_batch = sla_metrics(w.emitted)
+    assert len(w.emitted) == m_stream["completed"] == 200
+    for k in PHASE_COLS:
+        assert k in m_batch and k in m_stream
+        assert np.isfinite(m_batch[k])
+        assert m_stream[k] == pytest.approx(m_batch[k], rel=0.05,
+                                            abs=2e-9), k
+
+
+def test_requeue_resets_attribution_stamps():
+    r = Request(rid=0, prompt=np.arange(8, dtype=np.int32), osl=4)
+    r.prefill_start_t = 1.0
+    r.first_token_t = 2.0
+    r.insert_t = 3.0
+    r.decode_active_s = 0.5
+    r.reset_for_requeue()
+    assert r.insert_t is None and r.decode_active_s == 0.0
+    assert r.prefill_s is None and r.transfer_s is None
+    assert r.decode_stall_s is None
+
+
+# ---------------------------------------------------------------------------
+# disabled recorder is free
+
+
+def test_null_recorder_collapses_to_none():
+    cl = Cluster(_fleet(), recorder=NullRecorder())
+    assert cl.recorder is None      # the loop never sees a disabled recorder
+    m = cl.run(_requests(8), max_wall_s=1e6)
+    assert m["completed"] == 8
+    # NullRecorder's own surface stays inert and digestable
+    nr = NullRecorder()
+    assert nr.enabled is False and nr.events == () and nr.dumps == ()
+    assert nr.span_digest() == NullRecorder().span_digest()
+    nr.on_arrival(None, 0.0)        # every hook is a no-op
+    nr.on_round(None)
+
+
+def test_trace_recorder_attaches_and_resets_per_episode():
+    rec = TraceRecorder()
+    cl, _, _ = _serve(rec)
+    assert cl.recorder is rec and rec.events
+    n1 = len(rec.events)
+    cl.run(_requests(8, seed=3), max_wall_s=1e6)    # second episode resets
+    assert rec.episodes == 2
+    assert len(rec.events) < n1
+    assert set(rec.roles.values()) == {"prefill", "decode"}
+    for eid, meta in rec.engines.items():
+        assert meta["engine_id"] == eid and meta["backend"] == "sim"
+
+
+def test_event_cap_counts_overflow_instead_of_growing():
+    rec = TraceRecorder(max_events=32)
+    _serve(rec)
+    assert len(rec.events) == 32 and rec.dropped > 0
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export
+
+
+def test_perfetto_trace_schema_and_tiling(tmp_path):
+    rec = TraceRecorder()
+    cl, m, reqs = _serve(rec)
+    path = tmp_path / "trace.json"
+    counts = export_perfetto(rec, str(path), metrics=m)
+    obj = json.loads(path.read_text())
+    assert validate_trace(obj) == counts
+    assert counts["b"] == counts["e"] > 0
+    assert counts["X"] > 0 and counts["M"] >= len(rec.engines)
+    # async request phases tile: one queue and one decode slice per request
+    b_names = [e["name"] for e in obj["traceEvents"] if e["ph"] == "b"]
+    assert b_names.count("queue") == m["completed"]
+    assert b_names.count("decode") == m["completed"]
+    assert obj["otherData"]["metrics"]["completed"] == m["completed"]
+    # serialization is byte-stable across reruns
+    path2 = tmp_path / "trace2.json"
+    export_perfetto(rec, str(path2), metrics=m)
+    assert path.read_bytes() == path2.read_bytes()
+
+
+def test_validate_trace_rejects_malformed():
+    with pytest.raises(ValueError):
+        validate_trace({"nope": []})
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [{"ph": "Z", "ts": 0}]})
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [{"ph": "X", "ts": -1.0, "dur": 0}]})
+    with pytest.raises(ValueError):     # end before begin
+        validate_trace({"traceEvents": [
+            {"ph": "e", "ts": 0.0, "cat": "request", "id": "1",
+             "name": "queue"}]})
+    with pytest.raises(ValueError):     # unbalanced async slice
+        validate_trace({"traceEvents": [
+            {"ph": "b", "ts": 0.0, "cat": "request", "id": "1",
+             "name": "queue"}]})
+    with pytest.raises(ValueError):     # counter without numeric args
+        validate_trace({"traceEvents": [
+            {"ph": "C", "ts": 0.0, "name": "q", "args": {"v": "high"}}]})
+
+
+def test_describe_engine_tolerates_doubles():
+    class Double:
+        engine_id = 9
+    d = describe_engine(Double())
+    assert d["engine_id"] == 9 and d["backend"] == "unknown"
+    e = SimEngine(3, PERF, slots=2, capacity=32)
+    assert describe_engine(e) == e.describe()
+    assert e.describe()["backend"] == "sim"
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+
+
+def test_flight_ring_is_bounded_and_dumps_cap():
+    fr = FlightRecorder(limit=4, max_dumps=2)
+    for i in range(10):
+        fr.record(("arrival", float(i), i))
+    assert len(fr.snapshot()) == 4
+    assert fr.snapshot()[0][1] == 6.0       # oldest retained
+    assert fr.dump("slo_breach", 1.0) is not None
+    assert fr.dump("slo_breach", 2.0) is not None
+    assert fr.dump("slo_breach", 3.0) is None       # capped
+    assert fr.dropped_dumps == 1 and len(fr.dumps) == 2
+    assert "arrival" in fr.format()
+
+
+def test_flight_dump_on_injected_engine_failure():
+    rec = TraceRecorder()
+    cl = Cluster(_fleet(), recorder=rec)
+    eng = cl.pools["decode"][0]
+    orig = eng.decode_step
+    state = {"steps": 0}
+
+    def flaky(toks):
+        state["steps"] += 1
+        if state["steps"] == 2:
+            eng.fail()
+        return orig(toks)
+    eng.decode_step = flaky
+    m = cl.run(_requests(16), max_wall_s=1e6)
+    assert m["completed"] == 16 and cl.stats.engine_failures == 1
+    dumps = [d for d in rec.dumps if d["reason"] == "engine_failure"]
+    assert len(dumps) == 1
+    assert f"engine_id={eng.engine_id}" in dumps[0]["detail"]
+    assert dumps[0]["events"]           # span context rode along
+    kinds = {ev[0] for ev in rec.events}
+    assert "engine_failure" in kinds and "requeue" in kinds
+
+
+def test_flight_dump_on_sanitizer_error():
+    """A SanitizerError raised with a flight ring attached dumps the ring
+    and reports it (replacing the sanitizer's ad-hoc trace tail)."""
+    rec = TraceRecorder()
+    cl = Cluster(_fleet(), sanitize=True, recorder=rec)
+    assert cl.sanitizer.flight is rec.flight
+    m = cl.run(_requests(4), max_wall_s=1e6)
+    assert m["completed"] == 4
+    # force a violation directly: completing a request the sanitizer never
+    # saw arrive trips the lifecycle check
+    ghost = Request(rid=999, prompt=np.arange(4, dtype=np.int32), osl=1)
+    with pytest.raises(SanitizerError, match="flight recorder"):
+        cl.sanitizer.on_complete(ghost, cl.now)
+    dumps = [d for d in rec.dumps if d["reason"] == "sanitizer_error"]
+    assert len(dumps) == 1 and dumps[0]["events"]
+    # without a flight ring the old transition tail still reports
+    san = ClusterSanitizer()
+    with pytest.raises(SanitizerError, match="last transitions"):
+        san.on_complete(ghost, 0.0)
+
+
+def test_flight_dump_on_slo_breach(tmp_path):
+    rec = TraceRecorder()
+    cl = Cluster(_fleet(), recorder=rec)
+    reqs = [Request(rid=i, prompt=np.arange(24, dtype=np.int32), osl=4,
+                    ftl_target_s=1e-12) for i in range(3)]
+    m = cl.run(reqs, max_wall_s=1e6)
+    assert m["completed"] == 3 and m["sla_attainment"] == 0.0
+    breaches = [d for d in rec.dumps if d["reason"] == "slo_breach"]
+    assert len(breaches) == 3
+    out = tmp_path / "flight.json"
+    assert export_flight(rec, str(out)) == 3
+    payload = json.loads(out.read_text())
+    assert len(payload["dumps"]) == 3 and payload["dropped_dumps"] == 0
+
+
+# ---------------------------------------------------------------------------
+# digests + cross-backend parity
+
+
+def test_span_digest_content_vs_structural():
+    rec_a = TraceRecorder()
+    rec_b = TraceRecorder()
+    _serve(rec_a)
+    _serve(rec_b)
+    # same seeded workload, same backend -> byte-identical streams
+    assert rec_a.span_digest() == rec_b.span_digest()
+    assert rec_a.span_digest(content=False) == \
+        rec_b.span_digest(content=False)
+    rec_c = TraceRecorder()
+    _serve(rec_c, reqs=_requests(12, seed=9))       # different workload
+    assert rec_a.span_digest() != rec_c.span_digest()
+    assert rec_a.span_digest(content=False) != \
+        rec_c.span_digest(content=False)
+    # the structural projection really drops timestamps: perturbing one
+    # float changes the content digest but not the structural one
+    i = next(i for i, ev in enumerate(rec_a.events) if ev[0] == "arrival")
+    kind, t, rid = rec_a.events[i]
+    rec_a.events[i] = (kind, t + 123.0, rid)
+    assert rec_a.span_digest() != rec_b.span_digest()
+    assert rec_a.span_digest(content=False) == \
+        rec_b.span_digest(content=False)
+
+
+def test_cross_backend_per_request_span_parity(tmp_path):
+    """Real and sim backends serving the same workload produce the same
+    per-request span structure — lifecycle kind sequence, prefill engine,
+    admission order — and phase telescoping holds on the real backend's
+    measured timestamps too."""
+    from repro.models.config import ModelConfig
+    from repro.serving.backends import init_real_params, make_engine
+
+    cfg = ModelConfig(name="sim-tiny", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=VOCAB, remat=False, logits_chunk=32,
+                      dtype="float32")
+    params = init_real_params(cfg)
+
+    def run(backend):
+        def eng(i):
+            if backend == "real":
+                return make_engine("real", i, cfg, params, slots=4,
+                                   capacity=64)
+            return make_engine("sim", i, cfg, slots=4, capacity=64)
+        rec = TraceRecorder()
+        cl = Cluster({"prefill": [eng(0)], "decode": [eng(1), eng(2)]},
+                     scheduler=FCFSScheduler(), router=RoundRobinRouter(),
+                     recorder=rec)
+        reqs = _requests(n=6, seed=6, isl=16, osl=4, rate=100.0)
+        m = cl.run(reqs, max_wall_s=600)
+        assert m["completed"] == 6
+        return rec, reqs
+
+    rec_r, reqs_r = run("real")
+    rec_s, reqs_s = run("sim")
+    for r in reqs_r:
+        span_r = rec_r.lifecycle(r.rid)
+        span_s = rec_s.lifecycle(r.rid)
+        assert [ev[0] for ev in span_r] == [ev[0] for ev in span_s] == \
+            ["arrival", "admit", "prefill", "insert", "complete"]
+        # same prefill engine on both backends (matching engine ids)
+        assert span_r[1][3] == span_s[1][3] == 0
+    order = lambda reqs: [r.rid for r in                     # noqa: E731
+                          sorted(reqs, key=lambda r: (r.prefill_start_t,
+                                                      r.rid))]
+    assert order(reqs_r) == order(reqs_s)
+    # attribution telescopes on measured (real) timestamps as well
+    for r in reqs_r:
+        parts = (r.queue_wait_s, r.prefill_s, r.transfer_s, r.decode_s)
+        assert all(p is not None and p >= -1e-12 for p in parts), r.rid
+        assert sum(parts) == pytest.approx(r.e2e_s, abs=1e-9), r.rid
+    # both streams export to valid Perfetto JSON
+    for rec, tag in ((rec_r, "real"), (rec_s, "sim")):
+        counts = export_perfetto(rec, str(tmp_path / f"{tag}.json"))
+        assert counts["b"] == counts["e"] > 0
+    kinds = {ev[0] for ev in rec_r.events if ev[0] in LIFECYCLE_KINDS}
+    assert {"arrival", "admit", "prefill", "insert", "complete"} <= kinds
