@@ -121,6 +121,32 @@ print("BENCH_sim.json OK: sim backend %.0fx over real (floor %.0fx)"
       % (d["speedup"], d["floor"]))
 PY
 
+echo "== real engine: paged vs dense KV layout (smoke) =="
+rm -f BENCH_engine.json
+python benchmarks/engine_speed.py --smoke > /dev/null
+python - <<'PY'
+import json, sys
+try:
+    with open("BENCH_engine.json") as f:
+        d = json.load(f)
+except FileNotFoundError:
+    sys.exit("BENCH_engine.json missing: engine benchmark did not emit it")
+required = {"bench", "smoke", "model", "workload", "dense", "paged",
+            "speedup", "floor", "streams_identical", "stream_sha256",
+            "payload_ratio"}
+missing = required - set(d)
+assert not missing, f"BENCH_engine.json missing keys: {sorted(missing)}"
+assert d["floor"] >= 2.0 and d["speedup"] >= d["floor"], d
+assert d["streams_identical"], \
+    "paged and dense token streams diverged (bit-identity broken)"
+for side in ("dense", "paged"):
+    assert d[side]["decode_tokens_per_s"] > 0, d[side]
+assert d["payload_ratio"] >= 1.0, d
+print("BENCH_engine.json OK: paged decode %.1fx over dense (floor %.1fx), "
+      "KV payload %.1fx smaller, streams byte-identical"
+      % (d["speedup"], d["floor"], d["payload_ratio"]))
+PY
+
 echo "== fleet-scale event loop (smoke) =="
 rm -f BENCH_fleet.json
 python benchmarks/fleet_scale.py --smoke > /dev/null

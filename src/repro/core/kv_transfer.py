@@ -17,6 +17,16 @@ from repro.core.hardware import (DEFAULT_SYSTEM, HardwareLike, SystemConfig,
 from repro.core.perf_model import Mapping, PerfLLM, kv_shard_chips
 
 
+def paged_kv_tokens(isl: int, block_size: int) -> int:
+    """Tokens actually shipped per request under a paged KV layout: the
+    prompt rounded up to whole blocks (``block_size == 0`` = dense layout,
+    exact ISL). The paged serving engine transfers only the request's own
+    blocks, so this — not the slot capacity — is the Eq 1-2 numerator."""
+    if block_size <= 0:
+        return isl
+    return -(-isl // block_size) * block_size
+
+
 @dataclasses.dataclass(frozen=True)
 class TransferRequirement:
     egress_bw: float      # B/s per prefill chip (Eq 1)
@@ -36,18 +46,23 @@ def kv_transfer_requirement(model: PerfLLM, *, isl: int, osl: int,
                             prefill_batch: int = 1, decode_batch: int = 1,
                             sys_: SystemConfig = DEFAULT_SYSTEM,
                             prefill_sys: Optional[HardwareLike] = None,
-                            decode_sys: Optional[HardwareLike] = None
-                            ) -> TransferRequirement:
+                            decode_sys: Optional[HardwareLike] = None,
+                            block_size: int = 0) -> TransferRequirement:
     """Eqs 1-2 with the sharding/duplication correction.
 
     Eq 1: BW_egress  = KV(ISL) * BS_p / (FTL * NumGPU_p^shard)
     Eq 2: BW_ingress = KV(ISL) * BS_d / (TTL * OSL * NumGPU_d^shard)
 
+    ``block_size`` sizes KV(ISL) for a paged layout (block-rounded prompt
+    length — what the paged engine actually ships); 0 keeps the dense
+    exact-ISL sizing.
+
     With heterogeneous pools (``prefill_sys`` / ``decode_sys`` override
     ``sys_`` per side), the feasibility check uses the *min* of the two
     pools' per-chip DCN bandwidths — the hop is only as fast as its
     slower endpoint."""
-    kv_req_bytes = model.kv_bytes_per_token() * isl
+    kv_req_bytes = (model.kv_bytes_per_token()
+                    * paged_kv_tokens(isl, block_size))
     n_pre = kv_shard_chips(model, prefill_mapping)
     n_dec = kv_shard_chips(model, decode_mapping)
     egress = kv_req_bytes * prefill_batch / (ftl * n_pre)
@@ -66,13 +81,15 @@ def kv_transfer_requirement(model: PerfLLM, *, isl: int, osl: int,
 def transfer_latency_overlapped(model: PerfLLM, isl: int, ftl: float,
                                 prefill_mapping: Mapping,
                                 sys_: SystemConfig = DEFAULT_SYSTEM,
-                                decode_sys: Optional[HardwareLike] = None
-                                ) -> float:
+                                decode_sys: Optional[HardwareLike] = None,
+                                block_size: int = 0) -> float:
     """Exposed (non-overlapped) transfer time under layer-by-layer push:
     only the *last layer's* KV cannot overlap with compute. The push runs
     at the slower endpoint's DCN bandwidth when the decode pool's hardware
-    differs (``decode_sys``)."""
-    per_layer = model.kv_bytes_per_token() * isl / model.num_layers
+    differs (``decode_sys``). ``block_size`` applies paged block-rounding
+    to the shipped KV, as in ``kv_transfer_requirement``."""
+    per_layer = (model.kv_bytes_per_token()
+                 * paged_kv_tokens(isl, block_size) / model.num_layers)
     n_pre = kv_shard_chips(model, prefill_mapping)
     bw = sys_.chip.dcn_bw
     if decode_sys is not None:

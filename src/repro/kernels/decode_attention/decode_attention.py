@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -98,7 +100,7 @@ def decode_attention_kernel(q, k_cache, v_cache, lengths, *, scale: float,
             jax.ShapeDtypeStruct((B, Hkv, splits, G), jnp.float32),
             jax.ShapeDtypeStruct((B, Hkv, splits, G), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(lengths, q, k_cache, v_cache)

@@ -9,6 +9,17 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import (
     decode_attention_kernel)
+from repro.kernels.decode_attention.paged_decode import (
+    paged_decode_attention_kernel)
+
+
+def _merge_splits(o, m, l):
+    """Cross-split online-softmax reduction (splits on axis=2)."""
+    m_all = jnp.max(m, axis=2, keepdims=True)                 # [B,Hkv,1,G]
+    alpha = jnp.exp(m - m_all)                                # [B,Hkv,S,G]
+    l_all = jnp.sum(l * alpha, axis=2)                        # [B,Hkv,G]
+    o_all = jnp.sum(o * alpha[..., None], axis=2)             # [B,Hkv,G,dh]
+    return o_all / jnp.maximum(l_all, 1e-30)[..., None]
 
 
 @partial(jax.jit, static_argnames=("block_kv", "interpret"))
@@ -28,10 +39,29 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_kv: int = 512,
     o, m, l = decode_attention_kernel(
         qg, k_cache, v_cache, lengths.astype(jnp.int32), scale=scale,
         block_kv=block_kv, interpret=interpret)
-    # merge over splits (axis=2) with online-softmax algebra
-    m_all = jnp.max(m, axis=2, keepdims=True)                 # [B,Hkv,1,G]
-    alpha = jnp.exp(m - m_all)                                # [B,Hkv,S,G]
-    l_all = jnp.sum(l * alpha, axis=2)                        # [B,Hkv,G]
-    o_all = jnp.sum(o * alpha[..., None], axis=2)             # [B,Hkv,G,dh]
-    o_all = o_all / jnp.maximum(l_all, 1e-30)[..., None]
+    o_all = _merge_splits(o, m, l)
+    return o_all.reshape(B, H, dh).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_paged(q, pool_k, pool_v, tables, lengths, *,
+                           interpret: bool = False):
+    """Paged-layout decode attention. q: [B, H, dh]; pools:
+    [N, Bs, Hkv, dh]; tables: [B, nb] int32 block ids (the gathered
+    window, in sequence order); lengths: [B] valid positions within it.
+
+    Returns [B, H, dh]. Each table entry is one kv split; the block table
+    is scalar-prefetched so the kernel's DMA pipeline follows the
+    indirection (see paged_decode.py).
+    """
+    B, H, dh = q.shape
+    Hkv = pool_k.shape[2]
+    assert H % Hkv == 0
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, Hkv, G, dh)
+    o, m, l = paged_decode_attention_kernel(
+        qg, pool_k, pool_v, tables, lengths, scale=scale,
+        interpret=interpret)
+    o_all = _merge_splits(o, m, l)
     return o_all.reshape(B, H, dh).astype(q.dtype)

@@ -1,0 +1,122 @@
+"""Paged split-KV flash decoding for TPU (single-token GQA decode).
+
+Same MXU packing and online-softmax split algebra as
+``decode_attention.py``, but K/V live in a *block pool*
+[num_blocks, block_size, Hkv, dh] indexed through per-sequence block
+tables instead of a dense [B, Smax, ...] cache — the serving engine's
+paged layout streams straight into the kernel with no gather/copy pass.
+
+The block table rides in as a *scalar-prefetch* operand
+(``PrefetchScalarGridSpec``): the BlockSpec index map for K/V reads
+``tables[b, j]`` to pick which pool block the pipeline DMAs next, so the
+indirection costs nothing in the kernel body — grid step (b, h, j)
+simply sees "its" block in VMEM. Each table entry is one split of the
+kv axis; splits are parallel grid steps exactly like the dense kernel's
+``Smax/block_kv`` splits, and the tiny cross-split reduction happens in
+the jit'd wrapper (ops.py).
+
+Dead splits (whole block past the sequence length — pow2-padded table
+columns point at the reserved trash block) skip all compute with
+``pl.when`` and emit (0, -inf, 0) partials that the merge ignores.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+                  l_ref, *, scale: float, block_size: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    length = len_ref[b]
+    start = j * block_size
+    live = start < length
+
+    q = q_ref[0, 0]                                           # [G, dh]
+    G = q.shape[0]
+
+    @pl.when(live)
+    def _compute():
+        k = k_ref[0, :, 0, :]                                 # [Bs, dh]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # [G, Bs]
+        cols = start + jax.lax.broadcasted_iota(jnp.int32, (G, block_size), 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m = jnp.max(s, axis=-1)                               # [G]
+        p = jnp.exp(s - m[:, None])
+        p = jnp.where((m > 0.5 * NEG_INF)[:, None], p, 0.0)
+        l = jnp.sum(p, axis=-1)
+        o = jax.lax.dot_general(p.astype(v.dtype), v,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        o_ref[0, 0, 0] = o
+        m_ref[0, 0, 0] = m
+        l_ref[0, 0, 0] = l
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        o_ref[0, 0, 0] = jnp.zeros_like(o_ref[0, 0, 0])
+        m_ref[0, 0, 0] = jnp.full_like(m_ref[0, 0, 0], NEG_INF)
+        l_ref[0, 0, 0] = jnp.zeros_like(l_ref[0, 0, 0])
+
+
+def paged_decode_attention_kernel(q, pool_k, pool_v, tables, lengths, *,
+                                  scale: float, interpret: bool = False):
+    """q: [B, Hkv, G, dh]; pools: [N, Bs, Hkv, dh]; tables: [B, nb] int32;
+    lengths: [B] int32 (valid positions within the gathered window).
+
+    Returns partials (o [B,Hkv,nb,G,dh] f32, m, l [B,Hkv,nb,G]) — one
+    split per table entry, merged by the caller.
+    """
+    B, Hkv, G, dh = q.shape
+    block_size = pool_k.shape[1]
+    nb = tables.shape[1]
+    grid = (B, Hkv, nb)
+
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               block_size=block_size)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh),
+                         lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, dh),
+                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, block_size, 1, dh),
+                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G, dh),
+                         lambda b, h, j, tbl, lens: (b, h, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G),
+                         lambda b, h, j, tbl, lens: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, 1, G),
+                         lambda b, h, j, tbl, lens: (b, h, j, 0)),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, nb, G, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, nb, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, nb, G), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, pool_k, pool_v)

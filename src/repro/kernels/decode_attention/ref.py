@@ -1,8 +1,11 @@
-"""Pure-jnp oracle for single-token GQA decode attention."""
+"""Oracles for single-token GQA decode attention: pure-jnp for the dense
+split-KV kernel, pure-numpy for the paged kernel (no jax in the twin, so
+a ref mismatch can never share a bug with the implementation's stack)."""
 import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def decode_attention_ref(q, k_cache, v_cache, lengths, *, scale=None):
@@ -17,3 +20,30 @@ def decode_attention_ref(q, k_cache, v_cache, lengths, *, scale=None):
     s = jnp.where(mask, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhk,bkhd->bhd", p, v).astype(q.dtype)
+
+
+def decode_attention_paged_ref(q, pool_k, pool_v, tables, lengths, *,
+                               scale=None):
+    """Pure-numpy paged oracle. q: [B,H,dh]; pools: [N,Bs,Hkv,dh];
+    tables: [B,nb]; lengths: [B]. -> [B,H,dh] (f32 math)."""
+    q = np.asarray(q, np.float32)
+    pool_k = np.asarray(pool_k, np.float32)
+    pool_v = np.asarray(pool_v, np.float32)
+    tables = np.asarray(tables)
+    lengths = np.asarray(lengths)
+    B, H, dh = q.shape
+    _, Bs, Hkv, _ = pool_k.shape
+    nb = tables.shape[1]
+    W = nb * Bs
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    k = pool_k[tables].reshape(B, W, Hkv, dh)     # gather through the table
+    v = pool_v[tables].reshape(B, W, Hkv, dh)
+    k = np.repeat(k, H // Hkv, axis=2)
+    v = np.repeat(v, H // Hkv, axis=2)
+    s = np.einsum("bhd,bkhd->bhk", q, k) * scale
+    mask = np.arange(W)[None, None, :] < lengths[:, None, None]
+    s = np.where(mask, s, -np.inf)
+    s = s - s.max(axis=-1, keepdims=True)
+    e = np.where(mask, np.exp(s), 0.0)
+    p = e / np.maximum(e.sum(axis=-1, keepdims=True), 1e-30)
+    return np.einsum("bhk,bkhd->bhd", p, v)

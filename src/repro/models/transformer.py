@@ -297,6 +297,41 @@ def attn_full(p, x, cfg: ModelConfig, *, pos_offset=0, impl="xla"):
     return _attn_out(p, o.astype(x.dtype), cfg), (k, v)
 
 
+def _decode_attend(p, q, kd, vd, valid, cfg: ModelConfig):
+    """Single-token attention core shared by the dense and paged decode
+    paths: q [B,1,Hp,dh] against kd/vd [B,C,Hkvp,dh] with validity mask
+    [B,C]. One implementation means the two layouts run the *same float
+    ops* in the same order — masked columns contribute exact zeros after
+    the NEG_INF mask, so dense and paged token streams stay bit-identical
+    (asserted corpus-wide by tests/test_paged.py)."""
+    B = q.shape[0]
+    scale = 1.0 / math.sqrt(cfg.dh)
+    if cfg.grouped_decode and cfg.can_group_decode:
+        # GQA without materializing the expanded KV: pack the q-head group
+        # into the einsum (the decode-attention kernel's MXU trick, in XLA)
+        Hkvp = cfg.padded_kv_heads
+        G = cfg.padded_heads // Hkvp
+        qg = q[:, 0].reshape(B, Hkvp, G, cfg.dh)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qg, kd,
+                       preferred_element_type=f32) * scale  # [B,Hkv,G,C]
+        s = jnp.where(valid[:, None, None, :], s, L.NEG_INF)
+        pr = jax.nn.softmax(s.astype(f32), axis=-1)
+        o = jnp.einsum("bhgk,bkhd->bhgd", pr.astype(vd.dtype), vd,
+                       preferred_element_type=f32)
+        o = o.reshape(B, 1, cfg.padded_heads, cfg.dh)
+    else:
+        hmap = _head_map(cfg)
+        kr = L.expand_kv(kd, hmap)
+        vr = L.expand_kv(vd, hmap)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                       preferred_element_type=f32) * scale  # [B,H,1,C]
+        s = jnp.where(valid[:, None, None, :], s, L.NEG_INF)
+        pr = jax.nn.softmax(s.astype(f32), axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", pr.astype(vr.dtype), vr,
+                       preferred_element_type=f32)
+    return o
+
+
 def attn_decode(p, x1, cfg: ModelConfig, k_cache, v_cache, pos,
                 scales=None):
     """x1: [B,1,D]; caches [B,C,Hkv,dh] (int8 + scales when kv_quant);
@@ -326,35 +361,27 @@ def attn_decode(p, x1, cfg: ModelConfig, k_cache, v_cache, pos,
         v_cache = v_cache.at[bidx, slot].set(v[:, 0].astype(v_cache.dtype))
         kd, vd = k_cache, v_cache
         new_scales = {}
-    scale = 1.0 / math.sqrt(cfg.dh)
     valid = (kpos <= pos[:, None]) & (kpos >= 0)
     if cfg.sliding_window:
         valid &= kpos > pos[:, None] - cfg.sliding_window
-    if cfg.grouped_decode and cfg.can_group_decode:
-        # GQA without materializing the expanded KV: pack the q-head group
-        # into the einsum (the decode-attention kernel's MXU trick, in XLA)
-        Hkvp = cfg.padded_kv_heads
-        G = cfg.padded_heads // Hkvp
-        qg = q[:, 0].reshape(B, Hkvp, G, cfg.dh)
-        s = jnp.einsum("bhgd,bkhd->bhgk", qg, kd,
-                       preferred_element_type=f32) * scale  # [B,Hkv,G,C]
-        s = jnp.where(valid[:, None, None, :], s, L.NEG_INF)
-        pr = jax.nn.softmax(s.astype(f32), axis=-1)
-        o = jnp.einsum("bhgk,bkhd->bhgd", pr.astype(vd.dtype), vd,
-                       preferred_element_type=f32)
-        o = o.reshape(B, 1, cfg.padded_heads, cfg.dh)
-    else:
-        hmap = _head_map(cfg)
-        kr = L.expand_kv(kd, hmap)
-        vr = L.expand_kv(vd, hmap)
-        s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
-                       preferred_element_type=f32) * scale  # [B,H,1,C]
-        s = jnp.where(valid[:, None, None, :], s, L.NEG_INF)
-        pr = jax.nn.softmax(s.astype(f32), axis=-1)
-        o = jnp.einsum("bhqk,bkhd->bqhd", pr.astype(vr.dtype), vr,
-                       preferred_element_type=f32)
+    o = _decode_attend(p, q, kd, vd, valid, cfg)
     return (_attn_out(p, o.astype(x1.dtype), cfg),
             (k_cache, v_cache, new_scales))
+
+
+def _chunk_attend(q, kr, vr, mask, cfg: ModelConfig):
+    """Mask-based chunk-attention core shared by the dense and paged
+    prefill paths: q [B,Sq,H,dh] against *expanded* kr/vr [B,C,H,dh] with
+    causal mask [Sq,C]. Shared for the same reason as ``_decode_attend``:
+    identical float ops keep dense and paged prefill logits bit-equal."""
+    scale = 1.0 / math.sqrt(cfg.dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                   preferred_element_type=f32) * scale
+    s = jnp.where(mask[None, None], s, L.NEG_INF)
+    pr = jax.nn.softmax(s.astype(f32), axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pr.astype(vr.dtype), vr,
+                   preferred_element_type=f32)
+    return o
 
 
 def attn_chunk(p, x, cfg: ModelConfig, k_cache, v_cache, kv_offset):
@@ -370,19 +397,13 @@ def attn_chunk(p, x, cfg: ModelConfig, k_cache, v_cache, kv_offset):
     kr = L.expand_kv(k_cache, hmap)
     vr = L.expand_kv(v_cache, hmap)
     # mask-based chunk attention (kv_offset is dynamic in serving)
-    scale = 1.0 / math.sqrt(cfg.dh)
     C = kr.shape[1]
-    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
-                   preferred_element_type=f32) * scale
     qpos = kv_offset + jnp.arange(Sq)[:, None]
     kpos = jnp.arange(C)[None, :]
     mask = kpos <= qpos
     if cfg.sliding_window:
         mask &= kpos > qpos - cfg.sliding_window
-    s = jnp.where(mask[None, None], s, L.NEG_INF)
-    pr = jax.nn.softmax(s.astype(f32), axis=-1)
-    o = jnp.einsum("bhqk,bkhd->bqhd", pr.astype(vr.dtype), vr,
-                   preferred_element_type=f32)
+    o = _chunk_attend(q, kr, vr, mask, cfg)
     return _attn_out(p, o.astype(x.dtype), cfg), (k_cache, v_cache)
 
 
@@ -691,6 +712,195 @@ def prefill_chunked(params, cfg: ModelConfig, inputs, chunk_size: int,
     logits = _mask_padded_vocab(logits, cfg)
     cache = {"k": kv[0], "v": kv[1], "pos": jnp.full((B,), S, jnp.int32)}
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (block pool + per-layer block tables)
+#
+# Layout: one pool of KV blocks shared by every layer and request,
+#   pool = {"k", "v": [num_blocks, block_size, Hkvp, dh]}
+# with per-request *per-layer* block tables [L, nb] (int32 block ids).
+# Host-side ownership/refcounts live in serving/blocks.py; everything here
+# is the pure compute: decode gathers K/V through the table, prefill
+# appends chunk KV into the request's own blocks. Block 0 is reserved as a
+# scratch ("trash") block — padded table columns and inactive decode slots
+# point at it so the jit'd step needs no liveness branches; the causal
+# mask guarantees it is never read through a live position.
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Paged serving covers the dense-attention family. Quantized KV keeps
+    per-slot scale planes and sliding-window keeps a ring layout; both fall
+    back to the dense per-slot cache (as do rwkv/hybrid recurrent states,
+    which have no KV growth to page)."""
+    return (cfg.block == "attn" and not cfg.kv_quant
+            and not cfg.sliding_window)
+
+
+def init_block_pool(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """Zero-filled block pool {"k","v": [N, Bs, Hkvp, dh]}."""
+    Hkvp = cfg.padded_kv_heads
+    shape = (num_blocks, block_size, Hkvp, cfg.dh)
+    return {"k": jnp.zeros(shape, cfg.jdtype),
+            "v": jnp.zeros(shape, cfg.jdtype)}
+
+
+def gather_blocks(pool, ids):
+    """ids [L, nb] -> free-floating block tensors
+    {"k","v": [L, nb, Bs, Hkvp, dh]} — the paged KV-handoff payload (only
+    the request's own blocks travel, never the whole pool)."""
+    return {"k": pool["k"][ids], "v": pool["v"][ids]}
+
+
+def scatter_blocks(pool, ids, blocks):
+    """Write handoff block tensors into the destination pool at ids [L, nb]
+    (ids are distinct across layers: each layer owns its blocks)."""
+    flat = ids.reshape(-1)
+    bk = blocks["k"]
+    shp = (-1,) + tuple(bk.shape[2:])
+    return {"k": pool["k"].at[flat].set(bk.reshape(shp).astype(pool["k"].dtype)),
+            "v": pool["v"].at[flat].set(
+                blocks["v"].reshape(shp).astype(pool["v"].dtype))}
+
+
+def attn_decode_paged(p, x1, cfg: ModelConfig, pool_k, pool_v, tbl, pos,
+                      impl="xla"):
+    """One decode token against the paged layout. x1: [B,1,D] (normed);
+    pool_k/v: [N,Bs,Hkvp,dh]; tbl: [B,nb]; pos: [B]. Writes this token's
+    K/V into the slot's current block, then attends over the gathered
+    window W = nb*Bs. Inactive slots must point at the trash block with
+    pos=0 (their write lands there; nothing reads it).
+
+    ``impl="pallas"`` attends through ``kernels/decode_attention``'s paged
+    split-KV kernel — no gather, the block table is scalar-prefetched;
+    ``"xla"`` gathers and runs the dense decode core (bit-equal logits
+    with the dense cache)."""
+    B = x1.shape[0]
+    Bs = pool_k.shape[1]
+    W = tbl.shape[1] * Bs
+    q, k, v = _qkv(p, x1, cfg, pos[:, None])
+    bidx = jnp.arange(B)
+    wblk = tbl[bidx, pos // Bs]                               # [B]
+    off = pos % Bs
+    pool_k = pool_k.at[wblk, off].set(k[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[wblk, off].set(v[:, 0].astype(pool_v.dtype))
+    if impl == "pallas":
+        assert cfg.padded_heads == cfg.num_heads, "pallas path: no padding"
+        from repro.kernels.decode_attention.ops import decode_attention_paged
+        o = decode_attention_paged(q[:, 0], pool_k, pool_v, tbl, pos + 1)
+        o = o[:, None]                                        # [B,1,H,dh]
+    else:
+        kd = pool_k[tbl].reshape(B, W, cfg.padded_kv_heads, cfg.dh)
+        vd = pool_v[tbl].reshape(B, W, cfg.padded_kv_heads, cfg.dh)
+        valid = jnp.arange(W)[None, :] <= pos[:, None]
+        o = _decode_attend(p, q, kd, vd, valid, cfg)
+    return _attn_out(p, o.astype(x1.dtype), cfg), (pool_k, pool_v)
+
+
+def decode_step_paged(params, cfg: ModelConfig, pool, tables, pos, tokens,
+                      impl="xla"):
+    """Batched decode step on the paged layout. tables: [L,B,nb]; pos,
+    tokens: [B]. Returns (logits [B,Vp], pool, pos+1). The layer scan
+    carries the pool, mirroring ``decode_step``'s cache carry — per layer
+    it scatters B rows and gathers B*W rows instead of touching the whole
+    dense [B,C] cache plane."""
+    x = embed_tokens(params, cfg, tokens[:, None])
+
+    def body(carry, inp):
+        x1, pk, pv = carry
+        layer_p, tbl = inp
+        xn = L.rms_norm(x1, layer_p["attn_norm"], cfg.norm_eps)
+        attn_out, (pk, pv) = attn_decode_paged(layer_p, xn, cfg, pk, pv,
+                                               tbl, pos, impl=impl)
+        x1 = x1 + attn_out
+        x1, _ = _ffn(layer_p, x1, cfg)
+        return (x1, pk, pv), None
+
+    (x, pk, pv), _ = jax.lax.scan(body, (x, pool["k"], pool["v"]),
+                                  (params["blocks"], tables))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], head,
+                        preferred_element_type=f32)
+    logits = _mask_padded_vocab(logits, cfg)
+    logits = constrain(logits, "dp", "vocab")
+    return logits, {"k": pk, "v": pv}, pos + 1
+
+
+def prefill_chunked_paged(params, cfg: ModelConfig, inputs, chunk_size: int,
+                          pool, tables, *, start: int = 0, impl="xla"):
+    """Chunked prefill that appends straight into the request's blocks
+    (no dense B=1 cache is ever built). B=1; tables: [L, nb] covering at
+    least the prompt; chunk_size % block_size == 0 so every chunk lands on
+    block boundaries. ``start`` resumes after a prefix-cache hit (those
+    blocks already hold the prefix KV). Returns (logits [B,Vp], pool).
+
+    ``impl="pallas"`` runs each chunk through the flash-attention kernel
+    on the gathered (contiguous) context with ``q_offset`` — the
+    chunked-prefill wiring for ``kernels/flash_attention``; ``"xla"``
+    uses the same mask-based core as the dense path (bit-equal logits).
+    """
+    assert cfg.block == "attn" and not cfg.kv_quant
+    emb, _ = embed_inputs(params, cfg, inputs)
+    B, S, _ = emb.shape
+    assert B == 1, "paged prefill is per-request (B=1)"
+    Bs = pool["k"].shape[1]
+    Hkvp, dh = cfg.padded_kv_heads, cfg.dh
+    nb = tables.shape[1]
+    W = nb * Bs
+    assert chunk_size % Bs == 0, "chunks must be block-aligned"
+    assert (S - start) % chunk_size == 0 and start % chunk_size == 0
+    assert S <= W, f"prompt {S} exceeds table window {W}"
+    cb = chunk_size // Bs
+
+    def chunk_layers(x, pk, pv, lo):
+        # lo is a python int: block offsets below are static slices
+        def body(carry, inp):
+            xc, pk, pv = carry
+            layer_p, tbl = inp                            # tbl: [nb]
+            xn = L.rms_norm(xc, layer_p["attn_norm"], cfg.norm_eps)
+            positions = lo + jnp.arange(chunk_size)[None, :]
+            q, k, v = _qkv(layer_p, xn, cfg, positions)
+            wids = tbl[lo // Bs:lo // Bs + cb]
+            pk = pk.at[wids].set(
+                k[0].reshape(cb, Bs, Hkvp, dh).astype(pk.dtype))
+            pv = pv.at[wids].set(
+                v[0].reshape(cb, Bs, Hkvp, dh).astype(pv.dtype))
+            kd = pk[tbl].reshape(1, W, Hkvp, dh)
+            vd = pv[tbl].reshape(1, W, Hkvp, dh)
+            ctx = lo + chunk_size
+            if impl == "pallas":
+                assert cfg.padded_heads == cfg.num_heads, \
+                    "pallas path: no padding"
+                from repro.kernels.flash_attention.ops import flash_attention
+                o = flash_attention(
+                    q, kd[:, :ctx], vd[:, :ctx], causal=True, q_offset=lo,
+                    block_q=chunk_size, block_kv=chunk_size)
+            else:
+                hmap = _head_map(cfg)
+                kr = L.expand_kv(kd, hmap)
+                vr = L.expand_kv(vd, hmap)
+                qpos = lo + jnp.arange(chunk_size)[:, None]
+                mask = jnp.arange(W)[None, :] <= qpos
+                o = _chunk_attend(q, kr, vr, mask, cfg)
+            xc = xc + _attn_out(layer_p, o.astype(xc.dtype), cfg)
+            xc, _ = _ffn(layer_p, xc, cfg)
+            return (xc, pk, pv), None
+
+        (x, pk, pv), _ = jax.lax.scan(body, (x, pk, pv),
+                                      (params["blocks"], tables))
+        return x, pk, pv
+
+    pk, pv = pool["k"], pool["v"]
+    x_last = None
+    for lo in range(start, S, chunk_size):
+        x_last, pk, pv = chunk_layers(emb[:, lo:lo + chunk_size], pk, pv, lo)
+    x = L.rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head,
+                        preferred_element_type=f32)
+    logits = _mask_padded_vocab(logits, cfg)
+    return logits, {"k": pk, "v": pv}
 
 
 def verify_chunk(params, cfg: ModelConfig, cache, tokens, start):

@@ -22,6 +22,8 @@ def make_engine(backend: str, engine_id: int, cfg, params=None, **kw):
     """
     if backend == "sim":
         from repro.serving.simengine import SimEngine
+        for k in ("paged", "pool_blocks"):   # real-only KV-layout knobs
+            kw.pop(k, None)                  # (block_size is shared)
         return SimEngine(engine_id, cfg, params, **kw)
     if backend == "real":
         from repro.serving.engine import Engine

@@ -275,8 +275,10 @@ class PoolStats:
 def kv_bytes(cache) -> int:
     """Size of one request's KV/state handoff payload (the Eq 1-2 hop).
     Called at most once per transferring request; caches that already
-    know their payload size (``SimEngine``'s bookkeeping caches) expose
-    ``nbytes`` directly and skip the tensor walk."""
+    know their payload size (``SimEngine``'s bookkeeping caches and the
+    real engine's ``PagedCache``, which ships block-rounded true length
+    instead of capacity-padded tensors) expose ``nbytes`` directly and
+    skip the tensor walk."""
     nbytes = getattr(cache, "nbytes", None)
     if nbytes is not None:
         return int(nbytes)

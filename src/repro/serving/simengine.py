@@ -46,62 +46,11 @@ from repro.core.perf_model import (Mapping, OP_LATENCY, PerfLLM,
                                    _compute_time, _weight_bytes_per_chip,
                                    decode_step_perf, kv_shard_chips,
                                    prefill_perf)
-from repro.serving.common import EngineFailure, PrefixCache
+from repro.serving.common import EngineFailure, PrefixCache, StepLog
 
 # counting-rng stride (Knuth's multiplicative hash constant): consecutive
 # token ids decorrelate without any per-token state beyond the counter
 _TOK_STRIDE = 2654435761
-
-
-class StepLog:
-    """Step-time history with an optional memory bound.
-
-    List-compatible for every access the loop and tests perform (append,
-    ``len``, ``[i]``, ``[-1]``, slices, truthiness) with one extra
-    guarantee: *absolute* indices stay valid after trimming, because the
-    log remembers how many front entries it dropped. That preserves the
-    ``n0 = len(step_times); ...; step_times[n0]`` prefill-tick contract in
-    ``Cluster._step`` while a bounded engine (``step_history=N``) keeps at
-    least the last N entries and at most 2N — flat memory over
-    million-request fleet runs instead of one float per step forever."""
-
-    __slots__ = ("_buf", "_off", "_cap")
-
-    def __init__(self, cap: int = 0):
-        self._buf: List[float] = []
-        self._off = 0               # entries trimmed off the front
-        self._cap = int(cap)
-
-    def append(self, dt: float) -> None:
-        buf = self._buf
-        buf.append(dt)
-        if self._cap and len(buf) > 2 * self._cap:
-            drop = len(buf) - self._cap
-            del buf[:drop]
-            self._off += drop
-
-    def __len__(self) -> int:
-        return self._off + len(self._buf)
-
-    def __bool__(self) -> bool:
-        return bool(self._off or self._buf)
-
-    def __iter__(self):
-        return iter(self._buf)      # retained window only
-
-    def __getitem__(self, i):
-        if isinstance(i, slice):
-            start, stop, step = i.indices(len(self))
-            a = max(start - self._off, 0)
-            b = max(stop - self._off, 0)
-            return self._buf[a:b:step]
-        if i < 0:
-            return self._buf[i]
-        j = i - self._off
-        if j < 0:
-            raise IndexError(f"step_times[{i}] trimmed (history cap "
-                             f"{self._cap}, {self._off} dropped)")
-        return self._buf[j]
 
 
 def _token_base(prompt: np.ndarray) -> int:
@@ -268,7 +217,7 @@ class SimEngine:
                  chunk_size: int = 0, chip: Optional[ChipConfig] = None,
                  speed_factor: Optional[float] = None,
                  calibration: Optional[SimCalibration] = None,
-                 step_history: int = 0):
+                 step_history: int = 0, block_size: int = 0):
         self.engine_id = engine_id
         self.cfg = cfg
         self.params = params
@@ -300,6 +249,13 @@ class SimEngine:
         else:                       # executable ModelConfig (duck-typed —
             self._perf = perf_llm_from_config(cfg)   # no jax import here)
             attn_like = cfg.block == "attn"
+        # block_size > 0 mirrors the real backend's *paged* KV layout:
+        # handoff payloads are sized by block-rounded true length (not slot
+        # capacity) and the decode roofline reads block-rounded context.
+        # 0 (default) mirrors the dense layout: capacity-sized payloads,
+        # exact mean context.
+        self.block_size = (block_size if attn_like
+                           and self._perf.kv_bytes_per_token() > 0 else 0)
         self.vocab = int(self._perf.vocab_size)
         self._sys: SystemConfig = (as_system(chip) if chip is not None
                                    else DEFAULT_SYSTEM)
@@ -319,7 +275,6 @@ class SimEngine:
         # calibrations share safely.
         self._prefill_memo, self._decode_memo = _group_tables(
             self._perf, self._sys, self._map)
-        self._payload = self._payload_bytes()   # constant per engine
 
     # ---- fault/straggler injection hooks (same seams as Engine) ---------
 
@@ -337,7 +292,8 @@ class SimEngine:
         """Static metadata for trace track labels (serving.tracing)."""
         return {"engine_id": self.engine_id, "backend": self.backend,
                 "hardware": self.hardware, "slots": self.slots,
-                "capacity": self.capacity,
+                "capacity": self.capacity, "paged": self.block_size > 0,
+                "block_size": self.block_size,
                 "speed_factor": self.speed_factor,
                 "capacity_weight": self.capacity_weight}
 
@@ -380,13 +336,20 @@ class SimEngine:
             self._decode_memo[key] = t
         return t * self.calibration.decode_scale * self._extra
 
-    def _payload_bytes(self) -> int:
-        """Handoff size of one request's cache. Mirrors the real backend,
-        whose B=1 prefill cache is allocated at engine ``capacity`` (the
-        transfer ships the padded tensors, not just the filled prefix);
-        attention-free models ship their O(1) recurrent state."""
+    def _payload_bytes(self, length: Optional[int] = None) -> int:
+        """Handoff size of one request's cache. Dense mirror
+        (``block_size == 0``): the real backend's B=1 prefill cache is
+        allocated at engine ``capacity`` — the transfer ships the padded
+        tensors, not just the filled prefix. Paged mirror
+        (``block_size > 0``): only the request's own blocks travel, so the
+        payload is the *block-rounded true length*. Attention-free models
+        ship their O(1) recurrent state either way."""
         bytes_per_tok = self._perf.kv_bytes_per_token()
         if bytes_per_tok > 0:
+            if self.block_size and length is not None:
+                Bs = self.block_size
+                length = -(-length // Bs) * Bs
+                return int(length * bytes_per_tok)
             return int(self.capacity * bytes_per_tok)
         p = self._perf                      # rwkv-style state: [H, N, N]
         state = p.num_layers * p.num_heads * p.dh * p.dh * 4
@@ -404,7 +367,8 @@ class SimEngine:
         base = _token_base(prompt)
         self._advance(self._prefill_s(len(prompt)))
         return self._first_token(base), SimCache(
-            length=len(prompt), nbytes=self._payload, token_base=base)
+            length=len(prompt), nbytes=self._payload_bytes(len(prompt)),
+            token_base=base)
 
     def prefill_chunked(self, prompt: np.ndarray, chunk: int,
                         on_chunk=None) -> Tuple[int, SimCache]:
@@ -420,7 +384,10 @@ class SimEngine:
             _cache, start = self.prefix_cache.lookup(prompt)
         base = _token_base(prompt)
         self._advance(self._prefill_s(S - start + pad, ctx=start))
-        cache = SimCache(length=S, nbytes=self._payload, token_base=base)
+        # paged mirror: the chunked payload ships ceil(S/chunk) chunks of
+        # blocks (the real engine pads the prompt to a chunk multiple)
+        cache = SimCache(length=S, nbytes=self._payload_bytes(S + pad),
+                         token_base=base)
         if self.prefix_cache is not None:
             self.prefix_cache.insert(prompt, cache)
         if on_chunk:
@@ -466,8 +433,15 @@ class SimEngine:
         counting rng."""
         self._check()
         b = len(self.slot_req)
-        kv = int(round(sum(self._slot_pos[s] for s in self.slot_req)
-                       / max(b, 1)))
+        if self.block_size:
+            # paged mirror: each slot reads whole blocks, so the roofline
+            # sees per-slot block-rounded context
+            Bs = self.block_size
+            kv = int(round(sum(-(-self._slot_pos[s] // Bs) * Bs
+                               for s in self.slot_req) / max(b, 1)))
+        else:
+            kv = int(round(sum(self._slot_pos[s] for s in self.slot_req)
+                           / max(b, 1)))
         self._advance(self._decode_s(b, kv))
         out = {}
         for s in tokens_by_slot:

@@ -6,8 +6,10 @@ import pytest
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_paged)
+from repro.kernels.decode_attention.ref import (decode_attention_paged_ref,
+                                                decode_attention_ref)
 from repro.kernels.rwkv6.ops import wkv
 from repro.kernels.rwkv6.ref import wkv_ref
 
@@ -71,6 +73,64 @@ def test_decode_attention_length_mask_exact():
     kc2 = kc.at[0, 40:].set(99.0)
     vc2 = vc.at[0, 40:].set(-99.0)
     out2 = decode_attention(q, kc2, vc2, lengths, block_kv=64, interpret=True)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+def _paged_case(rng, B, N, Bs, Hkv, dh, lengths):
+    """Pool + sequential per-sequence tables; pad columns -> trash block 0."""
+    pool_k = rng.standard_normal((N, Bs, Hkv, dh)).astype(np.float32)
+    pool_v = rng.standard_normal((N, Bs, Hkv, dh)).astype(np.float32)
+    nb = max(-(-int(l) // Bs) for l in lengths)
+    tables = np.zeros((B, nb), np.int32)
+    ids = iter(range(1, N))
+    for b, l in enumerate(lengths):
+        for j in range(-(-int(l) // Bs)):
+            tables[b, j] = next(ids)
+    return pool_k, pool_v, tables
+
+
+@pytest.mark.parametrize("B,H,Hkv,dh,Bs,N,lengths", [
+    (2, 8, 2, 64, 16, 32, (37, 16)),
+    (3, 4, 4, 128, 32, 16, (64, 1, 90)),
+    (1, 16, 1, 64, 8, 64, (100,)),
+    (2, 8, 8, 64, 64, 8, (64, 128)),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_paged(B, H, Hkv, dh, Bs, N, lengths, dtype):
+    rng = np.random.default_rng(11)
+    q = rng.standard_normal((B, H, dh)).astype(np.float32)
+    pool_k, pool_v, tables = _paged_case(rng, B, N, Bs, Hkv, dh, lengths)
+    lens = np.asarray(lengths, np.int32)
+    out = decode_attention_paged(
+        jnp.asarray(q, dtype), jnp.asarray(pool_k, dtype),
+        jnp.asarray(pool_v, dtype), jnp.asarray(tables), jnp.asarray(lens),
+        interpret=True)
+    ref = decode_attention_paged_ref(q, pool_k, pool_v, tables, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32), ref,
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_decode_attention_paged_garbage_block_immunity():
+    """Trash-block contents and positions past `length` must not leak."""
+    rng = np.random.default_rng(13)
+    B, H, Hkv, dh, Bs, N = 2, 4, 2, 64, 16, 16
+    lengths = np.array([20, 33], np.int32)
+    q = rng.standard_normal((B, H, dh)).astype(np.float32)
+    pool_k, pool_v, tables = _paged_case(rng, B, N, Bs, Hkv, dh, lengths)
+    out1 = decode_attention_paged(
+        jnp.asarray(q), jnp.asarray(pool_k), jnp.asarray(pool_v),
+        jnp.asarray(tables), jnp.asarray(lengths), interpret=True)
+    # poison the trash block AND the tail of each sequence's last block
+    pool_k2, pool_v2 = pool_k.copy(), pool_v.copy()
+    pool_k2[0] = 1e4
+    pool_v2[0] = -1e4
+    for b, l in enumerate(lengths):
+        last = tables[b, (int(l) - 1) // Bs]
+        pool_k2[last, int(l) % Bs or Bs:] = 77.0
+        pool_v2[last, int(l) % Bs or Bs:] = -77.0
+    out2 = decode_attention_paged(
+        jnp.asarray(q), jnp.asarray(pool_k2), jnp.asarray(pool_v2),
+        jnp.asarray(tables), jnp.asarray(lengths), interpret=True)
     np.testing.assert_allclose(out1, out2, atol=1e-6)
 
 

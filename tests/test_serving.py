@@ -620,15 +620,23 @@ def test_prefix_cache_lru_eviction_order():
 
 def test_chunked_prefill_jit_wrappers_cached(params):
     """Satellite fix: chunked prefill must reuse jitted callables instead of
-    re-wrapping (and re-tracing) per request."""
+    re-wrapping (and re-tracing) per request — on both KV layouts."""
     eng = Engine(53, CFG, params, slots=2, capacity=64, chunk_size=8)
-    f1 = eng._chunked_fn(8, False)
-    assert eng._chunked_fn(8, False) is f1
+    assert eng.paged
+    g1 = eng._paged_chunked_fn(8)
+    assert eng._paged_chunked_fn(8) is g1
     rng = np.random.default_rng(6)
     p = rng.integers(0, CFG.vocab_size, 16).astype(np.int32)
     eng.prefill_chunked(p, 8)
-    eng.prefill_chunked(p, 8)        # second call: prefix hit -> base-cache fn
-    assert set(eng._chunked_fns) == {(8, False), (8, True)}
+    eng.prefill_chunked(p, 8)        # second call: prefix hit -> resume trace
+    assert set(eng._paged_chunked_fns) == {8}
+    dense = Engine(54, CFG, params, slots=2, capacity=64, chunk_size=8,
+                   paged=False)
+    f1 = dense._chunked_fn(8, False)
+    assert dense._chunked_fn(8, False) is f1
+    dense.prefill_chunked(p, 8)
+    dense.prefill_chunked(p, 8)      # second call: prefix hit -> base-cache fn
+    assert set(dense._chunked_fns) == {(8, False), (8, True)}
 
 
 # ---------------------------------------------------------------------------
